@@ -1,0 +1,165 @@
+"""Benchmarks for the paper's algorithmic claims (one per claim).
+
+All timings are CPU microbenchmarks of the jitted SimComm (P-lane) versions —
+they measure the *algorithm* (operation counts, redundancy factors, recovery
+cost), not TPU wall time; the TPU projection lives in the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SimComm, baseline_tsqr, caqr_factorize, ft_tsqr, trailing_update_baseline,
+    trailing_update_ft,
+)
+from repro.core import recovery as rec
+from repro.core.comm import SimComm as _Sim
+
+
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        out,
+    )
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        out,
+    )
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_tsqr() -> List[Dict]:
+    """Claim (III-B): FT butterfly has the same critical-path length as the
+    baseline tree and replicates R on every lane."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for P, m_loc, b in [(8, 256, 32), (16, 128, 32), (32, 64, 16)]:
+        comm = SimComm(P)
+        A = jnp.asarray(rng.standard_normal((P, m_loc, b)), jnp.float32)
+        ft = jax.jit(lambda a: ft_tsqr(a, comm).R)
+        bl = jax.jit(lambda a: baseline_tsqr(a, comm).R)
+        t_ft = _time(ft, A)
+        t_bl = _time(bl, A)
+        R = ft(A)
+        replicated = bool(np.all(np.asarray(R) == np.asarray(R[0])))
+        rows.append({
+            "name": f"tsqr_P{P}_m{m_loc}_b{b}",
+            "us_per_call": t_ft,
+            "derived": f"baseline_us={t_bl:.0f};levels={P.bit_length()-1};"
+                       f"R_replicated={replicated}",
+        })
+    return rows
+
+
+def bench_trailing() -> List[Dict]:
+    """Claim (III-C, Alg 2 vs Alg 1): exchange replaces send+recv, both
+    compute W; same result, redundant state created."""
+    rows = []
+    rng = np.random.default_rng(1)
+    for P, m_loc, b, n in [(8, 128, 16, 64), (16, 64, 16, 128)]:
+        comm = SimComm(P)
+        A = jnp.asarray(rng.standard_normal((P, m_loc, b)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+        fac = ft_tsqr(A, comm, target=0)  # classical survivor-chain stacking
+        ft = jax.jit(lambda c: trailing_update_ft(c, fac, comm)[0])
+        bl = jax.jit(lambda c: trailing_update_baseline(c, fac, comm))
+        t_ft = _time(ft, C)
+        t_bl = _time(bl, C)
+        rows.append({
+            "name": f"trailing_P{P}_n{n}",
+            "us_per_call": t_ft,
+            "derived": f"alg1_us={t_bl:.0f};ft_overhead={t_ft/max(t_bl,1e-9):.2f}x",
+        })
+    return rows
+
+
+def bench_recovery() -> List[Dict]:
+    """Claim: a failed lane's state is rebuilt from ONE surviving lane."""
+    rows = []
+    rng = np.random.default_rng(2)
+    for P, m_loc, b, n in [(8, 128, 16, 64), (16, 128, 32, 256)]:
+        comm = SimComm(P)
+        A = jnp.asarray(rng.standard_normal((P, m_loc, b)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+        fac = ft_tsqr(A, comm)
+        state = rec.trailing_begin(C, fac, comm)
+        state, bundle = rec.trailing_level(state, fac, comm)
+
+        def recover():
+            return rec.recover_cprime(bundle, failed=2, source=2 ^ 1)
+
+        t = _time(jax.jit(recover))
+        clean = rec.run_ft_trailing(C, fac, comm)
+        faulty = rec.run_ft_trailing(
+            C, fac, comm, fail_at_level=1, failed_lane=2, A_stacked=C
+        )
+        exact = float(np.abs(np.asarray(clean) - np.asarray(faulty)).max())
+        rows.append({
+            "name": f"recovery_P{P}_b{b}_n{n}",
+            "us_per_call": t,
+            "derived": f"sources_read=1;recovered_err={exact:.1e}",
+        })
+    return rows
+
+
+def bench_caqr() -> List[Dict]:
+    """End-to-end FT-CAQR vs LAPACK-style QR (accuracy + time)."""
+    rows = []
+    rng = np.random.default_rng(3)
+    for P, m_loc, n, b in [(8, 64, 128, 16), (16, 32, 256, 16)]:
+        comm = SimComm(P)
+        A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+        fn = jax.jit(lambda a: caqr_factorize(a, comm, b).R)
+        t = _time(fn, A, iters=3)
+        R = np.asarray(fn(A)[0])
+        Af = np.asarray(A).reshape(-1, n)
+        gram_err = np.abs(R.T @ R - Af.T @ Af).max() / np.abs(Af.T @ Af).max()
+        t_np = _time(lambda a: jnp.linalg.qr(a.reshape(-1, n), mode="r"), A, iters=3)
+        rows.append({
+            "name": f"caqr_{P*m_loc}x{n}_b{b}",
+            "us_per_call": t,
+            "derived": f"lapack_us={t_np:.0f};gram_rel_err={gram_err:.2e}",
+        })
+    return rows
+
+
+def bench_kernels() -> List[Dict]:
+    """Pallas kernels (interpret mode) vs jnp oracle."""
+    from repro.kernels import ops, ref
+
+    rows = []
+    rng = np.random.default_rng(4)
+    m, b, n = 256, 64, 512
+    A = jnp.asarray(rng.standard_normal((m, b)), jnp.float32)
+    Y = jnp.asarray(rng.standard_normal((m, b)), jnp.float32) * 0.1
+    T = jnp.triu(jnp.asarray(rng.standard_normal((b, b)), jnp.float32)) * 0.1
+    C = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    for name, k_fn, r_fn, args in [
+        ("panel_qr", lambda: ops.panel_qr(A, 0), lambda: ref.panel_qr(A, 0), ()),
+        ("wy_apply", lambda: ops.wy_apply(Y, T, C), lambda: ref.wy_apply(Y, T, C), ()),
+    ]:
+        tk = _time(lambda *_: k_fn(), iters=3)
+        tr = _time(lambda *_: r_fn(), iters=3)
+        ko, ro = k_fn(), r_fn()
+        err = max(
+            float(np.abs(np.asarray(a) - np.asarray(c)).max())
+            for a, c in zip(jax.tree_util.tree_leaves(ko), jax.tree_util.tree_leaves(ro))
+        )
+        rows.append({
+            "name": f"kernel_{name}",
+            "us_per_call": tk,
+            "derived": f"ref_us={tr:.0f};max_err={err:.1e};interpret=True",
+        })
+    return rows
+
+
+ALL = [bench_tsqr, bench_trailing, bench_recovery, bench_caqr, bench_kernels]

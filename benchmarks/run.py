@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper claim. Prints
+``name,us_per_call,derived`` CSV, then the roofline table if dry-run
+artifacts exist.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_core, roofline
+
+    print("name,us_per_call,derived")
+    for bench in bench_core.ALL:
+        for row in bench():
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+    rows = roofline.load_all()
+    if rows:
+        print()
+        print("# roofline (from dry-run artifacts; see EXPERIMENTS.md)")
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

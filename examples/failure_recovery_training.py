@@ -1,0 +1,41 @@
+"""Fault-tolerant training demo: lanes die mid-run under each FT-MPI
+semantics (paper SS II) and training continues — REBUILD provably
+bit-identical to the failure-free run.
+
+Run: PYTHONPATH=src python examples/failure_recovery_training.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig
+from repro.ft.failures import FailureSchedule
+from repro.ft.semantics import Semantics
+from repro.train import TrainConfig, Trainer
+
+cfg = get_smoke("tinyllama-1.1b")
+dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=7)
+
+print("=== reference run (no failures) ===")
+ref = Trainer(cfg, TrainConfig(steps=40, lr=8e-3, warmup=5, n_lanes=4,
+                               diskless_every=5, log_every=10), dcfg)
+ref.run()
+
+print("\n=== REBUILD: lane 2 dies at step 23, restored from its buddy ===")
+reb = Trainer(cfg, TrainConfig(steps=40, lr=8e-3, warmup=5, n_lanes=4,
+                               diskless_every=5, log_every=10,
+                               semantics=Semantics.REBUILD), dcfg)
+reb.run(FailureSchedule(events={23: [2]}))
+same = all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(ref.state.params),
+                    jax.tree_util.tree_leaves(reb.state.params))
+)
+print(f"REBUILD final params bit-identical to failure-free run: {same}")
+
+print("\n=== SHRINK: lane 1 dies at step 15, world shrinks to 3 lanes ===")
+shr = Trainer(cfg, TrainConfig(steps=40, lr=8e-3, warmup=5, n_lanes=4,
+                               diskless_every=5, log_every=10,
+                               semantics=Semantics.SHRINK), dcfg)
+hist = shr.run(FailureSchedule(events={15: [1]}))
+print(f"continued with {hist[-1]['lanes']} lanes, final loss {hist[-1]['loss']:.4f}")

@@ -1,0 +1,33 @@
+"""Quickstart: FT-CAQR of a general matrix + recovery from a lane failure.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import SimComm, caqr_factorize, ft_tsqr
+from repro.core import recovery as rec
+
+# --- 1. QR of a general matrix, distributed over 8 lanes -------------------
+P, m_loc, n, b = 8, 64, 256, 16
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+
+res = caqr_factorize(A, SimComm(P), panel_width=b)
+R = np.asarray(res.R[0])
+R_ref = np.linalg.qr(np.asarray(A).reshape(-1, n), mode="r")
+err = np.abs(np.abs(R) - np.abs(R_ref)).max() / np.abs(R_ref).max()
+print(f"FT-CAQR of {P*m_loc}x{n} matrix on {P} lanes: |R - R_lapack| rel = {err:.2e}")
+print(f"R replicated on all lanes: {bool(np.all(np.asarray(res.R) == R))}")
+
+# --- 2. kill a lane mid-update; recover from ONE buddy ----------------------
+comm = SimComm(P)
+panel = jnp.asarray(rng.standard_normal((P, m_loc, b)), jnp.float32)
+trailing = jnp.asarray(rng.standard_normal((P, m_loc, 32)), jnp.float32)
+fac = ft_tsqr(panel, comm)
+clean = rec.run_ft_trailing(trailing, fac, comm)
+faulty = rec.run_ft_trailing(
+    trailing, fac, comm, fail_at_level=1, failed_lane=3, A_stacked=trailing
+)
+print(f"recovery after killing lane 3 at tree level 1: "
+      f"bitwise-equal={np.array_equal(np.asarray(clean), np.asarray(faulty))}")

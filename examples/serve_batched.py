@@ -1,0 +1,27 @@
+"""Batched serving: train briefly, then serve batched requests through the
+prefill + cached-decode engine (rolling caches on sliding-window archs).
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig, make_batch
+from repro.serve import Engine, ServeConfig
+from repro.train import TrainConfig, Trainer
+
+cfg = get_smoke("tinyllama-1.1b")
+dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16, seed=0)
+trainer = Trainer(cfg, TrainConfig(steps=120, lr=1e-2, warmup=10, n_lanes=2,
+                                   log_every=40), dcfg)
+trainer.run()
+
+engine = Engine(cfg, trainer.state.params, ServeConfig(max_new_tokens=24))
+# prompts drawn from the training distribution: the model should continue
+# the periodic pattern
+batch = make_batch(dcfg, step=10_000)
+prompts = batch["tokens"][:4, :32]
+out = engine.generate(prompts)
+match = (out[:, :-1] == np.asarray(batch["tokens"][:4, 32 + 1 : 32 + out.shape[1]])).mean()
+print(f"generated {out.shape} tokens; continuation accuracy vs pattern: {match:.2f}")
+print(out[0])

@@ -1,0 +1,73 @@
+"""Render the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts. Run after the sweep:
+    PYTHONPATH=src python experiments/make_report.py > experiments/roofline_tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.roofline import analyze  # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") == "ok":
+            recs.append(rec)
+
+    print("### §Dry-run — lower+compile per cell (both meshes)\n")
+    print("| cell | mesh | chips | args GiB/dev | peak GiB/dev (analytic) | "
+          "HLO GFLOP/dev | coll GiB/dev | collective mix (AG/AR/RS/A2A/CP GiB) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        c = r["collectives"]
+        mix = "/".join(
+            f"{c.get(k, 0)/2**30:.1f}"
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"))
+        tag = f" [{r['tag']}]" if r.get("tag") else ""
+        print(f"| {r['arch']} x {r['shape']}{tag} | {r['mesh']} | {r['n_chips']} "
+              f"| {fmt_bytes(r['memory']['argument_bytes'])} "
+              f"| {fmt_bytes(r['memory'].get('peak_bytes_analytic', r['memory']['peak_bytes_est']))} "
+              f"| {r['cost']['flops_per_device']/1e9:.1f} "
+              f"| {c.get('total_bytes', 0)/2**30:.2f} | {mix} |")
+
+    print("\n### §Roofline — three terms per cell (single-pod, v5e constants)\n")
+    print("| cell | compute s | memory s | collective s | dominant | "
+          "useful-flop ratio | roofline fraction | lever |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "single" or r.get("tag"):
+            continue
+        a = analyze(r)
+        print(f"| {r['arch']} x {r['shape']} | {a['t_compute_s']:.4f} "
+              f"| {a['t_memory_s']:.4f} | {a['t_collective_s']:.4f} "
+              f"| **{a['dominant']}** | {a['useful_flop_ratio']:.3f} "
+              f"| {a['roofline_fraction']:.3f} | {a['lever']} |")
+
+    # perf-iteration artifacts (tagged)
+    tagged = [r for r in recs if r.get("tag")]
+    if tagged:
+        print("\n### §Perf — tagged iteration artifacts\n")
+        print("| tag | cell | peak GiB | GFLOP/dev | coll GiB/dev | dominant "
+              "| roofline fraction |")
+        print("|---|---|---|---|---|---|---|")
+        for r in tagged:
+            a = analyze(r)
+            print(f"| {r['tag']} | {r['arch']} x {r['shape']} x {r['mesh']} "
+                  f"| {a['peak_gib']:.2f} | {r['cost']['flops_per_device']/1e9:.1f} "
+                  f"| {r['collectives'].get('total_bytes', 0)/2**30:.2f} "
+                  f"| {a['dominant']} | {a['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

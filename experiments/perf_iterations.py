@@ -1,0 +1,96 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Each iteration re-runs a dry-run cell with a config/rule/sharding override
+and writes a tagged artifact to experiments/dryrun/. EXPERIMENTS.md §Perf
+narrates the hypotheses and outcomes; experiments/make_report.py renders the
+tagged table.
+
+Run one iteration per invocation (fresh process => fresh 512-device init):
+  PYTHONPATH=src python experiments/perf_iterations.py <iter_name>
+  PYTHONPATH=src python experiments/perf_iterations.py --list
+"""
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+# Hillclimb cells (per the assignment's selection rule):
+#   A: tinyllama-1.1b x train_4k   — most collective-bound dense baseline
+#   C: kimi-k2 x train_4k          — worst roofline fraction (1T MoE)
+#   D: caqr                        — the paper's own technique
+ITERS = {
+    # ---- A: tinyllama train_4k --------------------------------------------
+    # A1 H: at 1.1B params the per-layer sequence-parallel all-gathers of the
+    #       residual dominate; activations fit without SP -> turn SP off.
+    "A1_no_seq_shard": (
+        "tinyllama-1.1b", "train_4k", "single",
+        dict(rule_overrides={"seq_shard": None}, tag="A1_no_seq_shard"),
+    ),
+    # A2 H: FSDP weight-gathers are pure overhead at this scale — params+opt
+    #       fit replicated; ZeRO-0 removes per-layer all-gathers, leaving one
+    #       grad all-reduce per step.
+    "A2_no_fsdp": (
+        "tinyllama-1.1b", "train_4k", "single",
+        dict(rule_overrides={"seq_shard": None}, fsdp_override=None,
+             tag="A2_no_fsdp"),
+    ),
+    # A3 H: with SP back ON but FSDP off, SP's gathers return: isolates the
+    #       two effects (confirm/refute attribution).
+    "A3_sp_only": (
+        "tinyllama-1.1b", "train_4k", "single",
+        dict(fsdp_override=None, tag="A3_sp_only"),
+    ),
+    # A4 H: (from A1-A3's refutations) the dominant collectives are the
+    #       per-layer TP activation all-reduces + vocab-parallel CE — a 1.1B
+    #       model does not need TP at all on 256 chips. Pure ZeRO-3 DP:
+    #       batch over BOTH axes (1 sample/chip), params fully sharded,
+    #       no TP -> expect order-of-magnitude collective reduction.
+    "A4_pure_dp_zero3": (
+        "tinyllama-1.1b", "train_4k", "single",
+        dict(rule_overrides={"seq_shard": None, "batch": ("data", "model"),
+                             "vocab": None, "heads": None, "kv_heads": None,
+                             "ff": None, "experts": None, "ssm_heads": None,
+                             "lru": None, "kv_seq_shard": None},
+             fsdp_override=("data", "model"), tag="A4_pure_dp_zero3"),
+    ),
+    # ---- C: kimi-k2 train_4k ----------------------------------------------
+    # C1 H: the global-capacity MoE scatter replicates the (E,C,D) buffers
+    #       and all-reduces 154 TiB/device; per-data-shard dispatch
+    #       (moe_shards=16) shards the buffers and kills the all-reduce.
+    "C1_moe_sharded": (
+        "kimi-k2-1t-a32b", "train_4k", "single",
+        dict(overrides={"moe_shards": 16}, tag="C1_moe_sharded"),
+    ),
+    # C2 H: on top of C1, residual SP is a net loss for kimi (d_model=7168
+    #       activations are modest vs its MoE comm) — measure SP off.
+    "C2_moe_sharded_no_sp": (
+        "kimi-k2-1t-a32b", "train_4k", "single",
+        dict(overrides={"moe_shards": 16},
+             rule_overrides={"seq_shard": None}, tag="C2_moe_sharded_no_sp"),
+    ),
+    # ---- D: the paper's CAQR workload --------------------------------------
+    # D1 H: panel b=256 halves the panel count (and tree levels / exchanges)
+    #       at ~2x flops per combine — net win if collective-bound.
+    "D1_caqr_b256": ("caqr", None, "single", dict(panel=256, tag="D1_b256")),
+    # D2 H: b=64 doubles panels: more exchanges, less compute per panel —
+    #       expected regression (probe of the other direction).
+    "D2_caqr_b64": ("caqr", None, "single", dict(panel=64, tag="D2_b64")),
+}
+
+
+def main():
+    if len(sys.argv) < 2 or sys.argv[1] == "--list":
+        for k in ITERS:
+            print(k)
+        return
+    name = sys.argv[1]
+    arch, shape, mesh, kw = ITERS[name]
+    out = dryrun.OUT_DIR
+    if arch == "caqr":
+        dryrun.run_caqr_cell(mesh, out, panel=kw["panel"], tag=kw["tag"])
+    else:
+        dryrun.run_cell(arch, shape, mesh, out, **kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpointing: sharded disk checkpoints + diskless buddy/parity stores."""
+from repro.ckpt import diskless, save
+__all__ = ["diskless", "save"]

@@ -1,0 +1,81 @@
+"""Sharded on-disk checkpointing: npz per pytree-leaf group + json manifest.
+
+Supports async save (background thread snapshotting host copies first, so
+the training loop never blocks on disk) and exact restore, including the
+data-pipeline step for deterministic replay.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, params, opt_state, extra: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tag = f"step_{step:08d}"
+    path = os.path.join(directory, tag)
+    np.savez(path + ".params.npz", **_flatten(params))
+    np.savez(path + ".opt.npz", **_flatten(opt_state))
+    manifest = {"step": step, "extra": extra or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+    # atomic-ish publish
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(tag)
+    os.replace(os.path.join(directory, "LATEST.tmp"), os.path.join(directory, "LATEST"))
+    return tag
+
+
+def save_async(directory: str, step: int, params, opt_state, extra=None) -> threading.Thread:
+    """Snapshot to host memory synchronously, write in the background."""
+    params_host = jax.tree_util.tree_map(np.asarray, params)
+    opt_host = jax.tree_util.tree_map(np.asarray, opt_state)
+    t = threading.Thread(
+        target=save, args=(directory, step, params_host, opt_host, extra), daemon=True
+    )
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    tag = open(latest).read().strip()
+    return int(tag.split("_")[1])
+
+
+def restore(directory: str, params_like, opt_like, step: Optional[int] = None) -> Tuple[Any, Any, Dict]:
+    """Restore into the structure of the provided templates."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint in {directory}"
+    tag = f"step_{step:08d}"
+    path = os.path.join(directory, tag)
+    pz = np.load(path + ".params.npz")
+    oz = np.load(path + ".opt.npz")
+    manifest = json.load(open(path + ".json"))
+
+    def fill(tree, npz):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        for path_, leaf in paths:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path_)
+            arr = npz[key]
+            leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return fill(params_like, pz), fill(opt_like, oz), manifest

@@ -1,0 +1,180 @@
+"""Architecture / run configuration schema.
+
+One ``ModelConfig`` per assigned architecture lives in
+``repro/configs/<arch>.py`` with the exact published numbers, plus a
+``smoke()`` reduction of the same family for CPU tests.
+
+Layer structure is described by two repeating pattern strings:
+  mixer_pattern : per-layer token mixer
+      'G' global (full) attention        'L' local / sliding-window attention
+      'M' Mamba2 SSD block               'R' RG-LRU recurrent block
+  ffn_pattern   : per-layer channel mixer
+      'D' dense MLP                      'E' mixture-of-experts MLP
+      'N' none (e.g. Mamba2 blocks carry no separate MLP)
+Patterns repeat up to n_layers (e.g. gemma2's 'LG' alternation, or
+recurrentgemma's 'RRL').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: Optional[int] = None  # defaults to d_model
+    conv_width: int = 4
+    block_width: int = 4  # diagonal-block gating granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder for enc-dec archs (whisper). The conv/mel frontend is a STUB:
+    input_specs feed precomputed frame embeddings of length n_frames."""
+
+    n_layers: int
+    n_frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    """Vision frontend STUB: input_specs feed precomputed patch embeddings
+    that replace the first n_patches token positions."""
+
+    n_patches: int = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    activation: str = "swiglu"      # swiglu | geglu | sq_relu | gelu
+    mixer_pattern: str = "G"
+    ffn_pattern: str = "D"
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None
+    logit_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    post_norms: bool = False        # gemma2-style sandwich norms
+    embed_scale: bool = False       # gemma-style sqrt(d_model) embedding scale
+    qk_norm: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vlm: Optional[VLMConfig] = None
+    dtype: str = "bfloat16"
+    # --- performance knobs (subject of §Perf iterations) -----------------
+    attn_chunk: int = 2048          # KV block for streaming-softmax attention
+    attn_chunk_threshold: int = 8192  # use chunked attention for S >= this
+    attn_schedule: str = "scan"     # scan (production) | tri (cost compile)
+    loss_chunk: int = 8192          # token chunk for the CE loss
+    moe_shards: int = 1             # MoE dispatch groups (GSPMD: = data
+                                    # shards so expert buffers shard; see moe.py)
+    remat: str = "layer"            # none | layer (remat policy for bwd)
+    remat_group: int = 1            # layer-groups per checkpoint span: the
+                                    # bwd stash count is n_groups/remat_group
+    scan_layers: bool = True        # scan-over-layers (compact HLO)
+    scan_unroll: bool = False       # dry-run: unroll scans so XLA's
+                                    # cost_analysis counts every iteration
+                                    # (while bodies are counted once)
+
+    @property
+    def hdim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def mixer_at(self, layer: int) -> str:
+        return self.mixer_pattern[layer % len(self.mixer_pattern)]
+
+    def ffn_at(self, layer: int) -> str:
+        return self.ffn_pattern[layer % len(self.ffn_pattern)]
+
+    @property
+    def pattern_period(self) -> int:
+        import math
+
+        return abs(
+            len(self.mixer_pattern) * len(self.ffn_pattern)
+        ) // math.gcd(len(self.mixer_pattern), len(self.ffn_pattern))
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when no layer needs an unbounded full-attention cache —
+        the assignment's criterion for running long_500k."""
+        kinds = {self.mixer_at(i) for i in range(self.n_layers)}
+        return "G" not in kinds
+
+    def validate(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0, (self.n_heads, self.n_kv_heads)
+        for i in range(self.n_layers):
+            if self.mixer_at(i) == "M":
+                assert self.ssm is not None
+            if self.mixer_at(i) == "R":
+                assert self.rglru is not None
+            if self.ffn_at(i) == "E":
+                assert self.moe is not None
+            if self.mixer_at(i) == "L":
+                assert self.sliding_window is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell of the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

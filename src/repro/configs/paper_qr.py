@@ -1,0 +1,19 @@
+"""The paper's own workload configs: FT-CAQR of general matrices.
+
+These parameterize the ``caqr`` dry-run cell and the benchmarks; shapes
+follow the communication-avoiding literature's convention of tall panels
+(b = 128 keeps the MXU-aligned tile contract of the Pallas kernels).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class QRConfig:
+    name: str
+    m_rows: int
+    n_cols: int
+    panel: int
+
+
+PRODUCTION = QRConfig("caqr-prod", m_rows=65536, n_cols=4096, panel=128)
+SMOKE = QRConfig("caqr-smoke", m_rows=512, n_cols=128, panel=16)

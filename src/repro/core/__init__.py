@@ -1,0 +1,59 @@
+"""Core FT-CAQR library (the paper's contribution).
+
+Layers:
+  householder - WY/T compact representation substrate
+  tsqr        - local chain + distributed baseline-tree / FT-butterfly TSQR
+  trailing    - trailing-matrix update, Algorithm 1 (baseline) and 2 (FT)
+  caqr        - full panel-sweep FT-CAQR of general matrices
+  recovery    - failure injection + single-source REBUILD recovery
+  comm        - SPMD/simulated communication abstraction
+"""
+from repro.core.comm import AxisComm, SimComm
+from repro.core.householder import (
+    WY,
+    StackedQR,
+    apply_q,
+    apply_qt,
+    build_t,
+    householder_qr,
+    householder_qr_masked,
+    q_dense,
+    stacked_apply_q,
+    stacked_apply_qt,
+    stacked_qr,
+)
+from repro.core.tsqr import (
+    ChainFactors,
+    DistTSQRFactors,
+    baseline_tsqr,
+    dist_orthonormalize,
+    ft_tsqr,
+    ft_tsqr_q,
+    local_tsqr,
+    local_tsqr_q,
+    tsqr_orthonormalize,
+)
+from repro.core.trailing import (
+    RecoveryBundle,
+    trailing_update_baseline,
+    trailing_update_ft,
+)
+from repro.core.caqr import (
+    CAQRResult,
+    PanelFactors,
+    caqr_apply_qt,
+    caqr_factorize,
+    caqr_factorize_spmd,
+)
+from repro.core import lstsq, recovery
+
+__all__ = [
+    "AxisComm", "SimComm", "WY", "StackedQR", "apply_q", "apply_qt",
+    "build_t", "householder_qr", "householder_qr_masked", "q_dense",
+    "stacked_apply_q", "stacked_apply_qt", "stacked_qr", "ChainFactors",
+    "DistTSQRFactors", "baseline_tsqr", "dist_orthonormalize", "ft_tsqr",
+    "ft_tsqr_q", "local_tsqr", "local_tsqr_q", "tsqr_orthonormalize",
+    "RecoveryBundle", "trailing_update_baseline", "trailing_update_ft",
+    "CAQRResult", "PanelFactors", "caqr_apply_qt", "caqr_factorize",
+    "caqr_factorize_spmd", "recovery", "lstsq",
+]

@@ -1,0 +1,193 @@
+"""FT-CAQR: fault-tolerant QR of general (2-D) matrices (paper §III-C).
+
+1-D block-row layout, exactly the paper's setting: lane ``i`` owns rows
+``[i*m_loc, (i+1)*m_loc)`` of an ``(P*m_loc, n)`` matrix. The factorization
+sweeps ``n/b`` panels left to right; each panel is factorized by FT-TSQR
+(§III-B) and the trailing matrix updated by Algorithm 2 (§III-C).
+
+Sweep bookkeeping the paper elides (it presents single-panel trees): the tree
+of panel ``k`` is oriented so its root — the lane where the new R rows
+deposit — is the owner of global rows ``[k*b, (k+1)*b)``. Lanes whose rows
+are fully consumed contribute zero leaves and pass-through combines (encoded
+as zeroed (Y2, T) factors), so the trailing update inherits the masking with
+no extra logic. Requires ``m_loc % b == 0`` and ``n % b == 0``.
+
+Because row permutations do not change the R factor, the final R here equals
+(up to row signs) the R of any standard QR — validated against
+``jnp.linalg.qr`` and via the Gram identity ``R^T R == A^T A``.
+
+The stored per-panel factors form the implicit Q: ``caqr_apply_qt`` replays
+them against any conforming matrix (used by tests to check ``Q^T A == [R;0]``
+and by least-squares solves).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, SimComm
+from repro.core.householder import householder_qr_masked
+from repro.core.tsqr import DistTSQRFactors, ft_tsqr_combine
+from repro.core.trailing import RecoveryBundle, trailing_update_ft
+
+
+class PanelFactors(NamedTuple):
+    """Implicit-Q factors of one panel, per lane (leading panel axis after
+    the sweep; SimComm adds a lane axis on each leaf)."""
+
+    leaf_Y: jax.Array   # (m_loc, b) masked WY vectors (zero on frozen rows)
+    leaf_T: jax.Array   # (b, b)
+    level_Y2: jax.Array  # (L, b, b) — zeroed == pass-through
+    level_T: jax.Array   # (L, b, b)
+    row_start: jax.Array  # () per-lane offset of this lane's C' block
+    active: jax.Array     # () per-lane participation flag
+    target: jax.Array     # () tree root lane (replicated)
+
+
+class CAQRResult(NamedTuple):
+    R: jax.Array                      # (n, n) upper triangular, replicated
+    factors: PanelFactors             # stacked over panels (leading axis)
+    bundles: Optional[RecoveryBundle]  # stacked over panels, if requested
+
+
+def _panel_step(comm, b: int, collect_bundles: bool):
+    """Returns the scan body for one panel of the sweep."""
+    P = comm.axis_size()
+    idx = comm.axis_index()
+
+    def body(A_cur, k):
+        m_loc, n = comm.local_shape(A_cur)
+        col0 = k * b
+        t_lane = (k * b) // m_loc  # owner of this panel's diagonal rows
+        row_start_raw = k * b - idx * m_loc
+        active = row_start_raw < m_loc
+        row_start = jnp.clip(row_start_raw, 0, m_loc - b)
+
+        panel = comm.map_local(
+            lambda A, c: jax.lax.dynamic_slice_in_dim(A, c, b, axis=1)
+        )(A_cur, jnp.broadcast_to(col0, jnp.shape(idx)))
+
+        wy = comm.map_local(householder_qr_masked)(panel, row_start)
+        leaf_Y = comm.where(active, wy.Y, jnp.zeros_like(wy.Y))
+        leaf_T = comm.where(active, wy.T, jnp.zeros_like(wy.T))
+        R_leaf = comm.where(active, wy.R, jnp.zeros_like(wy.R))
+
+        level_Y2, level_T, _Rtree = ft_tsqr_combine(
+            comm, R_leaf, t_lane, active_threshold=t_lane
+        )
+        factors = DistTSQRFactors(leaf_Y, leaf_T, level_Y2, level_T, R_leaf)
+
+        A_next, bundle, C_final = trailing_update_ft(
+            A_cur, factors, comm, target=t_lane, row_start=row_start,
+            active=active, dead_threshold=t_lane,
+        )
+        # The new R rows (global rows [k*b, (k+1)*b)) live at lane t_lane's
+        # C' block; replicate them (one b x n all-reduce — the FT broadcast).
+        R_rows = comm.psum(
+            comm.where(idx == t_lane, C_final, jnp.zeros_like(C_final))
+        )
+
+        panel_factors = PanelFactors(
+            leaf_Y=leaf_Y,
+            leaf_T=leaf_T,
+            level_Y2=level_Y2,
+            level_T=level_T,
+            row_start=row_start,
+            active=active,
+            target=jnp.broadcast_to(t_lane, jnp.shape(idx)),
+        )
+        out = (panel_factors, R_rows, bundle if collect_bundles else None)
+        return A_next, out
+
+    return body
+
+
+def caqr_factorize(
+    A_local: jax.Array,
+    comm,
+    panel_width: int,
+    collect_bundles: bool = False,
+    use_scan: bool = True,
+) -> CAQRResult:
+    """FT-CAQR sweep. Returns replicated R plus implicit-Q panel factors.
+
+    A_local: (m_loc, n) per lane (SimComm: (P, m_loc, n)).
+    panel_width: b; requires m_loc % b == 0, n % b == 0, n <= P*m_loc.
+    """
+    b = panel_width
+    m_loc, n = comm.local_shape(A_local)
+    P = comm.axis_size()
+    assert m_loc % b == 0 and n % b == 0, (m_loc, n, b)
+    assert n <= P * m_loc, "matrix must have at least as many rows as columns"
+    n_panels = n // b
+    body = _panel_step(comm, b, collect_bundles)
+
+    ks = jnp.arange(n_panels)
+    if use_scan:
+        _, (factors, R_rows, bundles) = jax.lax.scan(body, A_local, ks)
+    else:
+        outs = []
+        A_cur = A_local
+        for k in range(n_panels):
+            A_cur, out = body(A_cur, jnp.asarray(k))
+            outs.append(out)
+        factors = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+        R_rows = jnp.stack([o[1] for o in outs])
+        bundles = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[o[2] for o in outs])
+            if collect_bundles
+            else None
+        )
+
+    # R_rows: (n_panels, b, n) replicated (SimComm: (n_panels, P, b, n)).
+    if isinstance(comm, SimComm):
+        R = R_rows.swapaxes(0, 1).reshape(P, n, n)
+        R = jnp.triu(R)
+    else:
+        R = jnp.triu(R_rows.reshape(n, n))
+    return CAQRResult(R=R, factors=factors, bundles=bundles)
+
+
+def caqr_apply_qt(
+    B_local: jax.Array,
+    factors: PanelFactors,
+    comm,
+    use_scan: bool = True,
+) -> jax.Array:
+    """Apply the implicit Q^T of a CAQR factorization to B (same row layout).
+
+    Replays every panel's leaf WY + tree combine against B. For B = A this
+    reproduces [R; 0] (up to the sweep's row bookkeeping) — the strongest
+    internal consistency check of the stored factors.
+    """
+    n_panels = jax.tree_util.tree_leaves(factors)[0].shape[0]
+
+    def body(B_cur, pf: PanelFactors):
+        dist = DistTSQRFactors(
+            pf.leaf_Y, pf.leaf_T, pf.level_Y2, pf.level_T, pf.leaf_T
+        )
+        tgt = pf.target[0] if isinstance(comm, SimComm) else pf.target
+        B_next, _, _ = trailing_update_ft(
+            B_cur, dist, comm, target=tgt, row_start=pf.row_start,
+            active=pf.active, dead_threshold=tgt,
+        )
+        return B_next, None
+
+    if use_scan:
+        B_out, _ = jax.lax.scan(body, B_local, factors)
+    else:
+        B_out = B_local
+        for k in range(n_panels):
+            pf = jax.tree_util.tree_map(lambda x: x[k], factors)
+            B_out, _ = body(B_out, pf)
+    return B_out
+
+
+# SPMD wrapper ---------------------------------------------------------------
+
+
+def caqr_factorize_spmd(A_local, axis_name: str, panel_width: int, **kw):
+    return caqr_factorize(A_local, AxisComm(axis_name), panel_width, **kw)

@@ -1,0 +1,95 @@
+"""Communication abstraction: one SPMD code path, two executions.
+
+The paper's algorithms are written as per-process (per-lane) SPMD programs
+with pairwise exchanges. We express them once against this small ``Comm``
+interface and run them two ways:
+
+* ``AxisComm``  — inside ``jax.shard_map`` over a named mesh axis; collectives
+  lower to real ICI ``collective-permute`` / ``all-reduce`` ops. This is the
+  production path (and the dry-run path).
+
+* ``SimComm``   — a P-lane simulator on a single device: every per-lane array
+  carries a leading ``P`` axis, local compute is ``vmap``-ed, and ppermute is
+  an explicit gather. This is how tests inject failures (blank a lane,
+  corrupt a lane) and exercise recovery without killable processes, with
+  bit-identical numerics to the SPMD path.
+
+Rules for code written against Comm:
+  * use ``x.mT`` (never ``x.T``) so matrices batch under SimComm;
+  * use ``comm.where(cond, a, b)`` for lane-dependent selects;
+  * wrap per-lane subroutines in ``comm.map_local(fn)``;
+  * shapes of local arrays via ``comm.local_shape(x)``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AxisComm:
+    """Comm over a named mesh axis; use inside shard_map."""
+
+    def __init__(self, axis_name: str):
+        self.axis_name = axis_name
+
+    def axis_size(self) -> int:
+        return jax.lax.axis_size(self.axis_name)
+
+    def axis_index(self):
+        return jax.lax.axis_index(self.axis_name)
+
+    def ppermute(self, x, perm: Sequence[Tuple[int, int]]):
+        return jax.lax.ppermute(x, self.axis_name, perm)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis_name)
+
+    def where(self, cond, a, b):
+        return jnp.where(cond, a, b)
+
+    def map_local(self, fn: Callable) -> Callable:
+        return fn
+
+    def local_shape(self, x) -> Tuple[int, ...]:
+        return tuple(x.shape)
+
+
+class SimComm:
+    """P-lane simulator: per-lane arrays carry a leading P axis."""
+
+    def __init__(self, P: int):
+        self.P = P
+
+    def axis_size(self) -> int:
+        return self.P
+
+    def axis_index(self):
+        return jnp.arange(self.P)
+
+    def ppermute(self, x, perm: Sequence[Tuple[int, int]]):
+        # lax.ppermute semantics: lanes that receive nothing get zeros.
+        out = jnp.zeros_like(x)
+        for src, dst in perm:
+            out = out.at[dst].set(x[src])
+        return out
+
+    def psum(self, x):
+        s = jnp.sum(x, axis=0, keepdims=True)
+        return jnp.broadcast_to(s, x.shape)
+
+    def where(self, cond, a, b):
+        cond = jnp.asarray(cond)
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        ndim = max(a.ndim, b.ndim)
+        if cond.ndim < ndim:
+            cond = cond.reshape(cond.shape + (1,) * (ndim - cond.ndim))
+        return jnp.where(cond, a, b)
+
+    def map_local(self, fn: Callable) -> Callable:
+        return jax.vmap(fn)
+
+    def local_shape(self, x) -> Tuple[int, ...]:
+        return tuple(x.shape)[1:]

@@ -1,0 +1,206 @@
+"""Householder QR with compact-WY representation.
+
+This is the numerical substrate of the paper: every node of the TSQR tree and
+every trailing-matrix update is expressed through (Y, T, R) factors with
+``Q = I - Y T Y^T`` (LAPACK ``geqrt`` convention: Y unit-lower-trapezoidal,
+T upper-triangular, ``tau = diag(T)``).
+
+Everything here is pure JAX, jit-able, and uses *masked* column loops instead
+of dynamic slicing so the same code path serves as the oracle for the Pallas
+kernels (``repro.kernels.ref`` re-exports these) and runs unmodified inside
+``shard_map``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WY(NamedTuple):
+    """Compact-WY factorization of an m x n panel: Q = I - Y T Y^T."""
+
+    Y: jax.Array  # (m, n) unit lower trapezoidal (implicit unit diagonal NOT stored: Y[j,j] == 1 stored explicitly)
+    T: jax.Array  # (n, n) upper triangular
+    R: jax.Array  # (n, n) upper triangular
+
+
+def _house(x: jax.Array, pivot: jax.Array, mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Householder reflector for the masked vector ``x``.
+
+    Returns ``(v, tau)`` with ``v[pivot] == 1``, ``v`` zero outside ``mask``,
+    such that ``(I - tau v v^T) x = beta * e_pivot`` and beta = -sign(x0)*||x||.
+
+    ``mask`` selects the active rows (pivot row included). Rows outside the
+    mask are ignored entirely, which lets callers express "QR of the rows
+    below the current panel" without any dynamic slicing.
+    """
+    x = jnp.where(mask, x, 0.0)
+    x0 = x[pivot]
+    sigma = jnp.sum(x * x) - x0 * x0
+    norm_x = jnp.sqrt(x0 * x0 + sigma)
+    sign = jnp.where(x0 >= 0, 1.0, -1.0).astype(x.dtype)
+    beta = -sign * norm_x
+    denom = x0 - beta
+    # Degenerate column (all zeros below+at pivot): tau = 0, v = e_pivot.
+    degenerate = norm_x <= jnp.asarray(1e-30, x.dtype)
+    safe_denom = jnp.where(degenerate, 1.0, denom)
+    v = x / safe_denom
+    v = jnp.where(mask, v, 0.0)
+    v = v.at[pivot].set(1.0)
+    tau = jnp.where(degenerate, 0.0, (beta - x0) / beta)
+    return v.astype(x.dtype), tau.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols",))
+def householder_qr_masked(
+    A: jax.Array, row_start: jax.Array, num_cols: int | None = None
+) -> WY:
+    """Blocked Householder QR of the active rows of ``A``.
+
+    A: (m, n). Active rows are ``row_start <= i < m``; rows above ``row_start``
+    are treated as frozen (they belong to already-computed R rows in CAQR) and
+    are neither read nor written. Column ``j``'s pivot sits at row
+    ``row_start + j``.
+
+    Returns WY factors of the active submatrix embedded at their global row
+    positions: Y is (m, n) with zeros in frozen rows, R is (n, n) and equals
+    rows ``row_start .. row_start+n`` of the transformed matrix.
+    """
+    m, n = A.shape
+    if num_cols is None:
+        num_cols = n
+    rows = jnp.arange(m)
+    dtype = A.dtype
+
+    def body(j, carry):
+        A_, Y_, taus_ = carry
+        pivot = row_start + j
+        mask = rows >= pivot
+        v, tau = _house(A_[:, j], pivot, mask)
+        # Apply (I - tau v v^T) to every column; finished columns (k < j) have
+        # zeros at and below the pivot in the masked region only where v acts,
+        # and v^T A on them is ~0, so the full-width update is exact and keeps
+        # the loop free of dynamic slices.
+        w = v @ A_  # (n,)
+        A_ = A_ - tau * jnp.outer(v, w)
+        Y_ = Y_.at[:, j].set(v)
+        taus_ = taus_.at[j].set(tau)
+        return A_, Y_, taus_
+
+    # Carries derive from A (not fresh constants) so their varying-manual-axes
+    # match under shard_map (see jax shard_map VMA rules).
+    A_out, Y, taus = jax.lax.fori_loop(
+        0,
+        num_cols,
+        body,
+        (A, A * jnp.zeros((), dtype), A[0] * jnp.zeros((), dtype)),
+    )
+    R_rows = jax.lax.dynamic_slice_in_dim(A_out, row_start, n, axis=0)
+    R = jnp.triu(R_rows[:n, :n])
+    T = build_t(Y, taus)
+    return WY(Y=Y, T=T, R=R)
+
+
+def householder_qr(A: jax.Array) -> WY:
+    """QR of the full matrix (row_start = 0)."""
+    return householder_qr_masked(A, jnp.asarray(0, jnp.int32))
+
+
+@jax.jit
+def build_t(Y: jax.Array, taus: jax.Array) -> jax.Array:
+    """Forward T recurrence: T[:j,j] = -tau_j T[:j,:j] (Y[:,:j]^T y_j).
+
+    Masked formulation over the Gram matrix G = Y^T Y so the loop body is
+    static-shaped.
+    """
+    n = Y.shape[1]
+    G = Y.T @ Y  # (n, n)
+    idx = jnp.arange(n)
+
+    def body(j, T):
+        g = jnp.where(idx < j, G[:, j], 0.0)  # (n,)
+        col = -taus[j] * (T @ g)
+        col = jnp.where(idx < j, col, 0.0)
+        col = col.at[j].set(taus[j])
+        return T.at[:, j].set(col)
+
+    T0 = G * jnp.zeros((), Y.dtype)  # derives from Y: VMA-consistent carry
+    return jax.lax.fori_loop(0, n, body, T0)
+
+
+@jax.jit
+def apply_qt(Y: jax.Array, T: jax.Array, C: jax.Array) -> jax.Array:
+    """Q^T C = C - Y (T^T (Y^T C))  for Q = I - Y T Y^T."""
+    W = T.T @ (Y.T @ C)
+    return C - Y @ W
+
+
+@jax.jit
+def apply_q(Y: jax.Array, T: jax.Array, C: jax.Array) -> jax.Array:
+    """Q C = C - Y (T (Y^T C))."""
+    W = T @ (Y.T @ C)
+    return C - Y @ W
+
+
+@jax.jit
+def q_dense(Y: jax.Array, T: jax.Array) -> jax.Array:
+    """Materialize Q = I - Y T Y^T (testing / small sizes only)."""
+    m = Y.shape[0]
+    return jnp.eye(m, dtype=Y.dtype) - Y @ (T @ Y.T)
+
+
+class StackedQR(NamedTuple):
+    """Structured QR of two stacked b x b upper triangles [R_top; R_bot].
+
+    The Householder vectors have the form Y = [I_b; Y2] with Y2 upper
+    triangular (LAPACK ``tpqrt`` structure), so only Y2 and T are stored.
+    Q = I - [I; Y2] T [I; Y2]^T and R is the new upper triangle.
+    """
+
+    Y2: jax.Array  # (b, b) upper triangular
+    T: jax.Array  # (b, b) upper triangular
+    R: jax.Array  # (b, b) upper triangular
+
+
+@jax.jit
+def stacked_qr(R_top: jax.Array, R_bot: jax.Array) -> StackedQR:
+    """QR of [R_top; R_bot] exploiting the triangular structure.
+
+    This is the TSQR tree-combine operation. Both inputs are b x b upper
+    triangular. The generic masked Householder loop preserves the structure
+    (Y's top block is exactly I, bottom block upper triangular); we run it on
+    the stacked 2b x b matrix and slice the structured parts out.
+    """
+    b = R_top.shape[0]
+    S = jnp.concatenate([jnp.triu(R_top), jnp.triu(R_bot)], axis=0)  # (2b, b)
+    wy = householder_qr_masked(S, jnp.asarray(0, jnp.int32))
+    Y2 = jnp.triu(wy.Y[b:, :])
+    return StackedQR(Y2=Y2, T=wy.T, R=wy.R)
+
+
+@jax.jit
+def stacked_apply_qt(
+    sq: StackedQR, C_top: jax.Array, C_bot: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Apply the stacked Q^T to [C_top; C_bot] using the paper's W form.
+
+    W = T^T (C_top + Y2^T C_bot)
+    C_top_hat = C_top - W          (paper: \\hat C'_0 = C'_0 - Y_0 W, Y_0 = I)
+    C_bot_hat = C_bot - Y2 W       (paper: \\hat C'_1 = C'_1 - Y_1 W)
+
+    Returns (C_top_hat, C_bot_hat, W); W is part of the recovery bundle.
+    """
+    W = sq.T.T @ (C_top + sq.Y2.T @ C_bot)
+    return C_top - W, C_bot - sq.Y2 @ W, W
+
+
+@jax.jit
+def stacked_apply_q(
+    sq: StackedQR, C_top: jax.Array, C_bot: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply the stacked Q (not transposed) to [C_top; C_bot]."""
+    W = sq.T @ (C_top + sq.Y2.T @ C_bot)
+    return C_top - W, C_bot - sq.Y2 @ W

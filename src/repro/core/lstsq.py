@@ -1,0 +1,55 @@
+"""Least-squares on top of FT-CAQR: min ||Ax - b||.
+
+x = R^{-1} (Q^T b)[:n] — the implicit Q^T is replayed from the stored panel
+factors (the same machinery the trailing update uses), so the solve inherits
+the factorization's fault tolerance: a lane lost during the apply is
+recoverable from its buddy's bundle exactly as in the factorization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.caqr import CAQRResult, caqr_apply_qt, caqr_factorize
+from repro.core.comm import SimComm
+
+
+def caqr_lstsq(A_local: jax.Array, b_local: jax.Array, comm, panel_width: int):
+    """Solve min ||Ax - b|| for the block-row-distributed (A, b).
+
+    A_local: (m_loc, n) per lane; b_local: (m_loc, k). Returns x (n, k),
+    replicated (computed from the replicated R and the gathered Q^T b rows).
+    """
+    res: CAQRResult = caqr_factorize(A_local, comm, panel_width)
+    Qtb = caqr_apply_qt(b_local, res.factors, comm)
+    # The n rows of Q^T b corresponding to R live at each panel's target
+    # lane's deposit rows — identical bookkeeping to the R collection: they
+    # are the first b rows (per panel) of the virtual result. Re-collect them
+    # exactly as caqr_factorize collected R rows: psum of the target lane's
+    # deposit block per panel. For simplicity we reuse the replay: the
+    # deposits sit at (target lane t, rows [row_start, row_start + b)).
+    m_loc = comm.local_shape(A_local)[0]
+    n = comm.local_shape(A_local)[1]
+    b = panel_width
+    n_panels = n // b
+    idx = comm.axis_index()
+
+    rows = []
+    for kpanel in range(n_panels):
+        t = (kpanel * b) // m_loc
+        rs = kpanel * b - t * m_loc
+
+        def grab(Q, i):
+            blk = jax.lax.dynamic_slice_in_dim(Q, rs, b, axis=0)
+            return jnp.where(i == t, blk, jnp.zeros_like(blk))
+
+        blk = comm.map_local(grab)(Qtb, idx)
+        rows.append(comm.psum(blk))
+    if isinstance(comm, SimComm):
+        Qtb_top = jnp.concatenate([r[0] for r in rows], axis=0)  # (n, k)
+        R = res.R[0]
+    else:
+        Qtb_top = jnp.concatenate(rows, axis=0)
+        R = res.R
+    x = jax.scipy.linalg.solve_triangular(R, Qtb_top, lower=False)
+    return x

@@ -1,0 +1,354 @@
+"""TSQR: Tall-Skinny QR via reduction trees (paper §III-A / §III-B).
+
+Two distributed variants over a Comm (see ``repro.core.comm``):
+
+* ``baseline_tsqr``  — the classical binary reduction tree [DGHL08]: at level
+  ``s`` the odd-numbered (mod 2^{s+1}) lane ships its R to the even one and
+  goes idle. Only lane 0 ends with R. Under SPMD "idle" lanes carry zeros.
+
+* ``ft_tsqr``        — the paper's fault-tolerant butterfly (Fig. 2): the pair
+  *exchanges* R factors and BOTH compute the stacked QR. Every lane ends with
+  the (bit-identical) final R and the full ladder of (Y2, T) combine factors
+  along its own path, so the redundancy of every intermediate doubles per
+  level and any lane's state is reconstructible from its XOR-buddy.
+
+Stacking convention (paper Alg. 1/2): within a pair, the lane whose index bit
+at the current level *differs from the target root's bit* is the TOP block —
+its Y is the identity. With the default target ``P-1`` this makes the odd
+lane (the baseline tree's sender) the top block, which is exactly what gives
+the paper's "sender needs only W" property. ``caqr`` rotates the target to
+the diagonal-owner lane per panel (bookkeeping the paper elides).
+
+Plus a sequential in-device chain (``local_tsqr``) used to keep leaf working
+sets VMEM-sized and to orthonormalize tall gradients in the CAQR-Muon
+optimizer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, SimComm
+from repro.core.householder import (
+    WY,
+    StackedQR,
+    apply_q,
+    householder_qr,
+    stacked_apply_q,
+    stacked_qr,
+)
+
+
+# ---------------------------------------------------------------------------
+# Local (single-device) sequential TSQR chain.
+# ---------------------------------------------------------------------------
+
+
+class ChainFactors(NamedTuple):
+    """Factors of a sequential TSQR chain over row tiles.
+
+    leaf: WY of tile 0.
+    steps: WY of each stacked [R_prev; tile_t] factorization, t = 1..T-1,
+           stacked on a leading axis: Y (T-1, b + tile_rows, b), T (T-1, b, b).
+    """
+
+    leaf_Y: jax.Array
+    leaf_T: jax.Array
+    step_Y: jax.Array
+    step_T: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def local_tsqr(A: jax.Array, tile_rows: int) -> Tuple[ChainFactors, jax.Array]:
+    """Sequential TSQR of A (m, b) over row tiles of ``tile_rows`` rows.
+
+    m must be a multiple of tile_rows and tile_rows >= b. Returns the chain
+    factors and the final R (b, b).
+    """
+    m, b = A.shape
+    assert m % tile_rows == 0 and tile_rows >= b, (m, b, tile_rows)
+    n_tiles = m // tile_rows
+    tiles = A.reshape(n_tiles, tile_rows, b)
+
+    leaf = householder_qr(tiles[0])
+    R = leaf.R
+
+    def step(carry, tile):
+        R_prev = carry
+        S = jnp.concatenate([R_prev, tile], axis=0)  # (b + tile_rows, b)
+        wy = householder_qr(S)
+        return wy.R, (wy.Y, wy.T)
+
+    if n_tiles > 1:
+        R, (step_Y, step_T) = jax.lax.scan(step, R, tiles[1:])
+    else:
+        step_Y = jnp.zeros((0, b + tile_rows, b), A.dtype)
+        step_T = jnp.zeros((0, b, b), A.dtype)
+    return ChainFactors(leaf.Y, leaf.T, step_Y, step_T), R
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def local_tsqr_q(factors: ChainFactors, tile_rows: int) -> jax.Array:
+    """Materialize the thin Q (m, b) of a ``local_tsqr`` chain.
+
+    Walks the chain backwards: at each step Q_t [E_t; 0] = [E_{t-1}; F_t]
+    where F_t is tile t's block of Q and E feeds the previous step.
+    """
+    b = factors.leaf_T.shape[-1]
+    n_steps = factors.step_Y.shape[0]
+    # + 0*leaf_T keeps the scan carry's varying-manual-axes consistent when
+    # this runs inside shard_map (e.g. the CAQR-Muon optimizer).
+    E = jnp.eye(b, dtype=factors.leaf_Y.dtype) + factors.leaf_T * 0
+
+    def step(carry, wy):
+        E_t = carry
+        Y, T = wy
+        block = jnp.concatenate(
+            [E_t, jnp.zeros((tile_rows, b), E_t.dtype)], axis=0
+        )
+        out = apply_q(Y, T, block)
+        return out[:b], out[b:]
+
+    if n_steps > 0:
+        # reverse scan: root (last chain step) first; outputs stay aligned
+        # with input positions, i.e. forward tile order 1..T-1.
+        E, F_tiles = jax.lax.scan(step, E, (factors.step_Y, factors.step_T), reverse=True)
+    else:
+        F_tiles = jnp.zeros((0, tile_rows, b), E.dtype)
+
+    pad = jnp.concatenate([E, jnp.zeros((tile_rows - b, b), E.dtype)], axis=0)
+    F0 = apply_q(factors.leaf_Y, factors.leaf_T, pad)
+    return jnp.concatenate([F0[None], F_tiles], axis=0).reshape(-1, b)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def tsqr_orthonormalize(A: jax.Array, tile_rows: int) -> Tuple[jax.Array, jax.Array]:
+    """Convenience: thin Q, R of tall-skinny A via the sequential chain."""
+    factors, R = local_tsqr(A, tile_rows)
+    return local_tsqr_q(factors, tile_rows), R
+
+
+# ---------------------------------------------------------------------------
+# Distributed TSQR over a Comm.
+# ---------------------------------------------------------------------------
+
+
+class DistTSQRFactors(NamedTuple):
+    """Per-lane factors of a distributed TSQR.
+
+    leaf_Y / leaf_T: WY factors of the lane's local QR.
+    level_Y2 / level_T: combine factors along this lane's butterfly path
+        (FT) or tree path (baseline), stacked on a leading ``levels`` axis.
+        Zeroed entries encode pass-through combines (inactive groups in the
+        CAQR sweep; idle lanes in the baseline tree).
+    R: final R — on every lane for FT, on lane 0 for baseline.
+    """
+
+    leaf_Y: jax.Array
+    leaf_T: jax.Array
+    level_Y2: jax.Array
+    level_T: jax.Array
+    R: jax.Array
+
+
+def _xor_perm(P: int, step: int) -> Sequence[Tuple[int, int]]:
+    return [(i, i ^ (1 << step)) for i in range(P)]
+
+
+def _levels(P: int) -> int:
+    assert P & (P - 1) == 0, f"TSQR axis must be a power of two, got {P}"
+    return P.bit_length() - 1
+
+
+def ft_tsqr_combine(
+    comm,
+    R: jax.Array,
+    target,
+    active_threshold=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The FT butterfly over already-computed leaf R factors.
+
+    ``target`` orients the virtual stacking so the final R_12 deposit of the
+    trailing update lands on lane ``target`` (the diagonal-owner in a CAQR
+    sweep). ``active_threshold`` (lane index ``t``; lanes < t are fully
+    consumed) enables the masked pass-through combines; ``None`` means all
+    lanes active.
+
+    Returns (level_Y2, level_T, R_final) with a leading ``levels`` axis on
+    the factor stacks.
+    """
+    P = comm.axis_size()
+    levels = _levels(P)
+    idx = comm.axis_index()
+    b = comm.local_shape(R)[-1]
+    if active_threshold is None:
+        active_threshold = jnp.zeros((), jnp.int32)
+
+    Y2s, Ts = [], []
+    for step in range(levels):
+        R_buddy = comm.ppermute(R, _xor_perm(P, step))
+        # Orientation: the TOP block of each pair is the lane whose index bit
+        # matches the target's bit, so the lane that is top at EVERY level is
+        # exactly ``target`` — that is where the R (and the trailing R_12
+        # rows) deposit. Default target P-1 == paper's odd-on-top convention.
+        tbit = (target >> step) & 1
+        is_top = ((idx >> step) & 1) == tbit
+        R_top = comm.where(is_top, R, R_buddy)
+        R_bot = comm.where(is_top, R_buddy, R)
+        sq = comm.map_local(stacked_qr)(R_top, R_bot)
+        # Group-activity masking (CAQR sweep): a group of 2^step lanes is
+        # fully consumed iff its max lane < active_threshold.
+        group = 1 << step
+        my_base = idx & ~(group - 1)
+        sib_base = (idx ^ group) & ~(group - 1)
+        my_dead = my_base + group <= active_threshold
+        sib_dead = sib_base + group <= active_threshold
+        both_live = jnp.logical_and(~my_dead, ~sib_dead)
+        R = comm.where(
+            both_live,
+            sq.R,
+            comm.where(my_dead, R_buddy, R),  # adopt / pass-through
+        )
+        Y2s.append(comm.where(both_live, sq.Y2, jnp.zeros_like(sq.Y2)))
+        Ts.append(comm.where(both_live, sq.T, jnp.zeros_like(sq.T)))
+
+    if levels:
+        level_Y2 = jnp.stack(Y2s)
+        level_T = jnp.stack(Ts)
+    else:
+        shape = (0,) + tuple(jnp.shape(R))
+        level_Y2 = jnp.zeros(shape, R.dtype)
+        level_T = jnp.zeros(shape, R.dtype)
+    return level_Y2, level_T, R
+
+
+def ft_tsqr(A_local: jax.Array, comm, target: int | None = None) -> DistTSQRFactors:
+    """The paper's FT-TSQR butterfly (§III-B, Fig. 2).
+
+    Every lane exchanges R with its XOR-buddy at each level and both compute
+    the identical stacked QR. After ``log2 P`` levels every lane holds the
+    final R, and the set of lanes sharing each intermediate doubles per level
+    — that is the redundancy the recovery procedure exploits.
+    """
+    P = comm.axis_size()
+    if target is None:
+        target = P - 1  # paper convention: odd lane on top at every level
+    leaf = comm.map_local(householder_qr)(A_local)
+    level_Y2, level_T, R = ft_tsqr_combine(comm, leaf.R, jnp.asarray(target))
+    return DistTSQRFactors(leaf.Y, leaf.T, level_Y2, level_T, R)
+
+
+def baseline_tsqr(
+    A_local: jax.Array, comm, broadcast_r: bool = False
+) -> DistTSQRFactors:
+    """Classical one-directional reduction tree (paper §III-A baseline).
+
+    At level s only lanes with the low s+1 index bits == 0 receive and
+    compute; senders go idle (carry zeros afterwards). Only lane 0 holds the
+    final R; ``broadcast_r`` adds the extra broadcast the FT variant gets for
+    free.
+    """
+    P = comm.axis_size()
+    levels = _levels(P)
+    idx = comm.axis_index()
+
+    leaf = comm.map_local(householder_qr)(A_local)
+    R = leaf.R
+
+    Y2s, Ts = [], []
+    for step in range(levels):
+        stride = 1 << step
+        group = 1 << (step + 1)
+        # sender i (i % group == stride) ships R to i - stride.
+        perm = [(i, i - stride) for i in range(P) if i % group == stride]
+        R_from_buddy = jax.tree_util.tree_map(
+            lambda x: comm.ppermute(x, perm), R
+        )
+        is_receiver = (idx % group) == 0
+        # RECEIVER's R on top (identity block): the survivor chain then
+        # carries the R-slot upward consistently — the stacking that makes
+        # the classical trailing tree well-defined (see trailing.py notes).
+        sq = comm.map_local(stacked_qr)(R, R_from_buddy)
+        R = comm.where(is_receiver, sq.R, jnp.zeros_like(sq.R))
+        Y2s.append(comm.where(is_receiver, sq.Y2, jnp.zeros_like(sq.Y2)))
+        Ts.append(comm.where(is_receiver, sq.T, jnp.zeros_like(sq.T)))
+
+    if broadcast_r and levels:
+        # one-to-all broadcast of lane 0's R (what FT gets structurally)
+        R = comm.psum(comm.where(idx == 0, R, jnp.zeros_like(R)))
+
+    if levels:
+        level_Y2 = jnp.stack(Y2s)
+        level_T = jnp.stack(Ts)
+    else:
+        shape = (0,) + tuple(jnp.shape(R))
+        level_Y2 = jnp.zeros(shape, R.dtype)
+        level_T = jnp.zeros(shape, R.dtype)
+    return DistTSQRFactors(leaf.Y, leaf.T, level_Y2, level_T, R)
+
+
+def ft_tsqr_q(
+    factors: DistTSQRFactors, comm, target: int | None = None
+) -> jax.Array:
+    """Materialize this lane's block of the thin Q from FT-TSQR factors.
+
+    Top-down walk of the butterfly: at each level the pair exchanges its
+    current E block (b x b) and each computes its own half of
+    Q_level [E_top; E_bot]. One b x b ppermute per level — the same
+    communication shape as the forward pass.
+    """
+    P = comm.axis_size()
+    levels = _levels(P)
+    if target is None:
+        target = P - 1
+    target = jnp.asarray(target)
+    idx = comm.axis_index()
+    b = comm.local_shape(factors.R)[-1]
+    # E starts as I on the virtual-top lane (= target), 0 elsewhere.
+    eye = comm.map_local(lambda r: jnp.eye(b, dtype=r.dtype) + r * 0)(factors.R)
+    E = comm.where(idx == target, eye, jnp.zeros_like(eye))
+
+    for step in reversed(range(levels)):
+        E_buddy = comm.ppermute(E, _xor_perm(P, step))
+        tbit = (target >> step) & 1
+        is_top = ((idx >> step) & 1) == tbit
+        E_top = comm.where(is_top, E, E_buddy)
+        E_bot = comm.where(is_top, E_buddy, E)
+        Y2 = factors.level_Y2[step]
+        T = factors.level_T[step]
+        new_top, new_bot = comm.map_local(
+            lambda y2, t, ct, cb: stacked_apply_q(StackedQR(y2, t, t), ct, cb)
+        )(Y2, T, E_top, E_bot)
+        E = comm.where(is_top, new_top, new_bot)
+
+    m_loc = comm.local_shape(factors.leaf_Y)[0]
+
+    def leaf_apply(Y, T, E_blk):
+        pad = jnp.concatenate([E_blk, jnp.zeros((m_loc - b, b), E_blk.dtype)], axis=0)
+        return apply_q(Y, T, pad)
+
+    return comm.map_local(leaf_apply)(factors.leaf_Y, factors.leaf_T, E)
+
+
+def dist_orthonormalize(A_local: jax.Array, comm) -> Tuple[jax.Array, jax.Array]:
+    """Distributed thin-QR orthonormalization: returns (Q_local, R).
+
+    R is replicated on every lane (the FT property); Q_local is this lane's
+    row block of the thin Q.
+    """
+    factors = ft_tsqr(A_local, comm)
+    return ft_tsqr_q(factors, comm), factors.R
+
+
+# Convenience SPMD wrappers (call inside shard_map) -------------------------
+
+
+def ft_tsqr_spmd(A_local: jax.Array, axis_name: str) -> DistTSQRFactors:
+    return ft_tsqr(A_local, AxisComm(axis_name))
+
+
+def dist_orthonormalize_spmd(A_local: jax.Array, axis_name: str):
+    return dist_orthonormalize(A_local, AxisComm(axis_name))

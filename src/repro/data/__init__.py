@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, Pipeline, make_batch
+__all__ = ["DataConfig", "Pipeline", "make_batch"]

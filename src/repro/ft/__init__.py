@@ -1,0 +1,4 @@
+"""Fault-tolerance substrate: semantics, failure injection, elastic re-mesh."""
+from repro.ft import elastic, failures, semantics, stragglers
+from repro.ft.semantics import Semantics
+__all__ = ["elastic", "failures", "semantics", "stragglers", "Semantics"]

@@ -1,0 +1,50 @@
+"""Elastic re-meshing: rebuild the mesh after SHRINK/REBUILD and reshard
+live state onto it.
+
+On SHRINK the data axis loses lanes: the world goes from (data=N, model=M)
+to (data=N-k, model=M); parameters (replicated or model-sharded) reshard
+with a device_put; the global batch either shrinks or is re-split over the
+survivors. On REBUILD the mesh shape is unchanged — the new device takes the
+dead one's coordinates and its state arrives from the diskless buddy store.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_data_model_mesh(n_data: int, n_model: int, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    need = n_data * n_model
+    assert len(devices) >= need, (len(devices), need)
+    arr = np.asarray(devices[:need]).reshape(n_data, n_model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def shrink_mesh(mesh, dead_data_lane: int):
+    """Drop one data-axis row of the mesh (the failed host's chips)."""
+    devs = np.asarray(mesh.devices)
+    survivors = np.delete(devs, dead_data_lane, axis=0)
+    return jax.sharding.Mesh(survivors, mesh.axis_names)
+
+
+def reshard(tree: Any, mesh, spec_fn=None) -> Any:
+    """device_put every leaf onto the new mesh. spec_fn(path_leaf) -> P;
+    default: fully replicated (parameters in pure-DP training)."""
+
+    def put(leaf):
+        spec = P() if spec_fn is None else spec_fn(leaf)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, tree)
+
+
+def rebalance_batch(global_batch: int, n_lanes_old: int, n_lanes_new: int) -> Tuple[int, int]:
+    """Keep global batch constant if divisible, else shrink to the nearest
+    multiple. Returns (new_global_batch, per_lane)."""
+    per = global_batch // n_lanes_new
+    return per * n_lanes_new, per

@@ -1,0 +1,57 @@
+"""Failure injection + detection simulation.
+
+``FailureSchedule`` scripts lane deaths at given steps (tests/examples);
+``Detector`` models ULFM semantics: an operation touching a failed lane
+raises ``LaneFailure`` — operations not involving it proceed unknowingly
+(paper §II last paragraph).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+
+class LaneFailure(RuntimeError):
+    def __init__(self, lane: int, step: int):
+        super().__init__(f"lane {lane} failed at step {step}")
+        self.lane = lane
+        self.step = step
+
+
+@dataclasses.dataclass
+class FailureSchedule:
+    """{step: [lanes that die at the start of that step]}"""
+
+    events: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+
+    def lanes_failing_at(self, step: int) -> List[int]:
+        return self.events.get(step, [])
+
+
+class Detector:
+    def __init__(self, n_lanes: int, schedule: Optional[FailureSchedule] = None):
+        self.n = n_lanes
+        self.schedule = schedule or FailureSchedule()
+        self.dead: Set[int] = set()
+        self.fired: Set[Tuple[int, int]] = set()
+
+    def begin_step(self, step: int) -> List[int]:
+        """Kill scheduled lanes; return the newly dead (detection event).
+        Each scheduled (step, lane) event fires exactly once — a REBUILD
+        replay passing the same step does not re-kill the respawned lane."""
+        newly = []
+        for l in self.schedule.lanes_failing_at(step):
+            if l not in self.dead and (step, l) not in self.fired:
+                newly.append(l)
+                self.fired.add((step, l))
+        self.dead.update(newly)
+        return newly
+
+    def check(self, lanes: Tuple[int, ...], step: int) -> None:
+        """An operation involving these lanes: raises on the first dead one."""
+        for l in lanes:
+            if l in self.dead:
+                raise LaneFailure(l, step)
+
+    def revive(self, lane: int) -> None:
+        self.dead.discard(lane)

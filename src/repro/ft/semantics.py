@@ -1,0 +1,12 @@
+"""FT-MPI / ULFM error-handling semantics (paper §II), as a policy enum the
+training supervisor executes on detected failures."""
+from __future__ import annotations
+
+import enum
+
+
+class Semantics(enum.Enum):
+    SHRINK = "shrink"    # drop the lane; survivors renumber; smaller world
+    BLANK = "blank"      # keep the hole; rank invalid; survivors keep ranks
+    REBUILD = "rebuild"  # respawn the rank; restore its state; same world
+    ABORT = "abort"      # terminate everything (non-FT default)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the CAQR compute hot-spots.
+
+panel_qr   - Householder panel factorization (geqrt) in VMEM
+stacked_qr - TSQR tree combine (tpqrt) + fused trailing combine
+wy_apply   - fused compact-WY application C - Y (T^T (Y^T C))
+
+ops.py exposes jit'd wrappers (interpret=True on CPU); ref.py holds the
+pure-jnp oracles every kernel is validated against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,62 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel bodies run as traced Python over VMEM-shaped blocks, which is how
+they are validated against ``ref.py``. On TPU set ``interpret=False`` (the
+default flips automatically based on the backend).
+
+``use_kernels(False)`` (or the REPRO_NO_KERNELS env var) routes every call to
+the pure-jnp oracle instead — the escape hatch the rest of the framework uses
+for shapes outside the kernels' alignment contract.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import panel_qr as _panel
+from repro.kernels import stacked_qr as _stacked
+from repro.kernels import wy_apply as _wy
+
+_USE_KERNELS = os.environ.get("REPRO_NO_KERNELS", "0") != "1"
+
+
+def use_kernels(flag: bool) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = flag
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def panel_qr(A: jax.Array, row_start=0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(Y, T, R) of the masked Householder panel QR of A (m, b)."""
+    if not _USE_KERNELS:
+        return ref.panel_qr(A, row_start)
+    return _panel.panel_qr(A, jnp.asarray(row_start, jnp.int32), interpret=_interpret())
+
+
+def stacked_qr(R_top: jax.Array, R_bot: jax.Array):
+    """(Y2, T, R) of the TSQR tree combine."""
+    if not _USE_KERNELS:
+        return ref.stacked_qr(R_top, R_bot)
+    return _stacked.stacked_qr(R_top, R_bot, interpret=_interpret())
+
+
+def wy_apply(Y: jax.Array, T: jax.Array, C: jax.Array, block_n: int = 256) -> jax.Array:
+    """Fused Q^T C."""
+    if not _USE_KERNELS:
+        return ref.wy_apply(Y, T, C)
+    return _wy.wy_apply(Y, T, C, block_n=block_n, interpret=_interpret())
+
+
+def stacked_apply(Y2, T, C_top, C_bot, block_n: int = 512):
+    """Fused trailing combine; returns (Ct_hat, Cb_hat, W)."""
+    if not _USE_KERNELS:
+        return ref.stacked_apply(Y2, T, C_top, C_bot)
+    return _stacked.stacked_apply(Y2, T, C_top, C_bot, block_n=block_n, interpret=_interpret())

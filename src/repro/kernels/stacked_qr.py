@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: structured QR of two stacked upper triangles.
+
+The TSQR tree-combine (LAPACK ``tpqrt`` analogue): QR of [R_top; R_bot] where
+both are (b, b) upper triangular. The Householder vectors have the structure
+Y = [I; Y2] with Y2 upper triangular, so the kernel emits only (Y2, T, R).
+
+Entirely VMEM-resident (everything is b x b; b <= 256 -> < 1 MiB); the value
+of the kernel is latency: the combine sits on the critical path of every
+TSQR tree level, so one pallas_call replaces ~6 XLA ops and their HBM
+round-trips.
+
+Also provides the fused *trailing combine* kernel (paper Alg. 2 inner body):
+    W         = T^T (C_top + Y2^T C_bot)
+    C_top_hat = C_top - W
+    C_bot_hat = C_bot - Y2 W
+tiled over the trailing dimension n.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stacked_qr_kernel(rt_ref, rb_ref, y2_ref, t_ref, r_ref, *, b: int):
+    # Build the 2b x b stack in VMEM; the masked column loop preserves the
+    # triangular structure exactly (top block of Y is I, bottom is triu).
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)[:, 0]
+    tri = cols[:, None] <= cols[None, :]
+    S = jnp.concatenate(
+        [jnp.where(tri, rt_ref[...], 0.0), jnp.where(tri, rb_ref[...], 0.0)],
+        axis=0,
+    )
+    m = 2 * b
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)[:, 0]
+    dtype = S.dtype
+
+    def col_step(j, carry):
+        A_, Y_, taus_ = carry
+        mask = rows >= j
+        x = jnp.where(mask, A_[:, j], 0.0)
+        x0 = x[j]
+        sigma = jnp.sum(x * x) - x0 * x0
+        norm_x = jnp.sqrt(x0 * x0 + sigma)
+        sign = jnp.where(x0 >= 0, 1.0, -1.0).astype(dtype)
+        beta = -sign * norm_x
+        degenerate = norm_x <= jnp.asarray(1e-30, dtype)
+        denom = jnp.where(degenerate, 1.0, x0 - beta)
+        v = jnp.where(mask, x / denom, 0.0)
+        v = v.at[j].set(1.0)
+        tau = jnp.where(degenerate, 0.0, (beta - x0) / beta).astype(dtype)
+        w = v @ A_
+        A_ = A_ - tau * v[:, None] * w[None, :]
+        Y_ = Y_.at[:, j].set(v)
+        taus_ = taus_.at[j].set(tau)
+        return A_, Y_, taus_
+
+    A_out, Y, taus = jax.lax.fori_loop(0, b, col_step, (S, S * 0.0, S[0] * 0.0))
+
+    G = Y.T @ Y
+
+    def t_step(j, T):
+        g = jnp.where(cols < j, G[:, j], 0.0)
+        col = -taus[j] * (T @ g)
+        col = jnp.where(cols < j, col, 0.0)
+        col = col.at[j].set(taus[j])
+        return T.at[:, j].set(col)
+
+    T = jax.lax.fori_loop(0, b, t_step, G * 0.0)
+
+    y2_ref[...] = jnp.where(tri, Y[b:, :], 0.0)
+    t_ref[...] = T
+    r_ref[...] = jnp.where(tri, A_out[:b, :], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stacked_qr(R_top: jax.Array, R_bot: jax.Array, *, interpret: bool = True):
+    """(Y2, T, R) of QR([R_top; R_bot]); all (b, b)."""
+    b = R_top.shape[0]
+    kernel = functools.partial(_stacked_qr_kernel, b=b)
+    spec = pl.BlockSpec((b, b), lambda: (0, 0))
+    Y2, T, R = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((b, b), R_top.dtype)] * 3,
+        interpret=interpret,
+    )(R_top, R_bot)
+    return Y2, T, R
+
+
+def _stacked_apply_kernel(y2_ref, t_ref, ct_ref, cb_ref, ot_ref, ob_ref, w_ref):
+    Y2 = y2_ref[...]
+    T = t_ref[...]
+    Ct = ct_ref[...]
+    Cb = cb_ref[...]
+    inner = Ct + jnp.dot(Y2.T, Cb, preferred_element_type=jnp.float32)
+    W = jnp.dot(T.T, inner, preferred_element_type=jnp.float32)
+    ot_ref[...] = (Ct - W).astype(ot_ref.dtype)
+    ob_ref[...] = (Cb - jnp.dot(Y2, W, preferred_element_type=jnp.float32)).astype(
+        ob_ref.dtype
+    )
+    w_ref[...] = W.astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def stacked_apply(
+    Y2: jax.Array,
+    T: jax.Array,
+    C_top: jax.Array,
+    C_bot: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = True,
+):
+    """Fused trailing combine (paper Alg. 2 body). Returns (Ct_hat, Cb_hat, W).
+
+    Y2, T: (b, b); C_top, C_bot: (b, n). Tiled over n.
+    """
+    b, n = C_top.shape
+    n_pad = (-n) % block_n
+    if n_pad:
+        C_top = jnp.pad(C_top, ((0, 0), (0, n_pad)))
+        C_bot = jnp.pad(C_bot, ((0, 0), (0, n_pad)))
+    n_total = n + n_pad
+    grid = (n_total // block_n,)
+    bspec = pl.BlockSpec((b, b), lambda j: (0, 0))
+    cspec = pl.BlockSpec((b, block_n), lambda j: (0, j))
+    ot, ob, W = pl.pallas_call(
+        _stacked_apply_kernel,
+        grid=grid,
+        in_specs=[bspec, bspec, cspec, cspec],
+        out_specs=[cspec, cspec, cspec],
+        out_shape=[jax.ShapeDtypeStruct((b, n_total), C_top.dtype)] * 3,
+        interpret=interpret,
+    )(Y2, T, C_top, C_bot)
+    if n_pad:
+        return ot[:, :n], ob[:, :n], W[:, :n]
+    return ot, ob, W

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused compact-WY application  C <- C - Y (T^T (Y^T C)).
+
+This is the flop hot-spot of CAQR (the trailing-matrix update applies the
+panel's Q^T to every trailing column) and of the CAQR-Muon optimizer. It is
+two back-to-back GEMMs plus a rank-b update, fused so the C tile is read from
+HBM once and written once.
+
+Tiling: grid over column blocks of C. Per program:
+    VMEM in : Y (m, b) [revisited every program — see note], T (b, b),
+              C block (m, bn)
+    compute : W1 = Y^T C    (b, bn)   MXU
+              W  = T^T W1   (b, bn)   MXU
+              out = C - Y W (m, bn)   MXU
+    VMEM out: out block (m, bn)
+
+Arithmetic intensity per C element: 2*(2b) flops / 8 bytes -> b/2 flops/byte;
+for b=128 that is 64 f/B, comfortably compute-bound against TPU v5e's
+~240 f/B ridge only for b >= ~480, i.e. the update is *memory*-bound at
+b=128 — which is why fusing the three ops (one C pass instead of three)
+is the right TPU shape for it.
+
+m, bn should be multiples of (8, 128); b a multiple of 128 for MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wy_apply_kernel(y_ref, t_ref, c_ref, o_ref):
+    Y = y_ref[...]
+    T = t_ref[...]
+    C = c_ref[...]
+    W1 = jnp.dot(Y.T, C, preferred_element_type=jnp.float32)
+    W = jnp.dot(T.T, W1, preferred_element_type=jnp.float32)
+    o_ref[...] = (C - jnp.dot(Y, W, preferred_element_type=jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def wy_apply(
+    Y: jax.Array,
+    T: jax.Array,
+    C: jax.Array,
+    *,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Q^T C. Shapes: Y (m, b), T (b, b), C (m, n); returns (m, n).
+
+    n is padded up to a multiple of ``block_n`` internally.
+    """
+    m, b = Y.shape
+    mC, n = C.shape
+    assert mC == m, (m, mC)
+    n_pad = (-n) % block_n
+    if n_pad:
+        C = jnp.pad(C, ((0, 0), (0, n_pad)))
+    n_total = n + n_pad
+    grid = (n_total // block_n,)
+    out = pl.pallas_call(
+        _wy_apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, b), lambda j: (0, 0)),
+            pl.BlockSpec((b, b), lambda j: (0, 0)),
+            pl.BlockSpec((m, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_total), C.dtype),
+        interpret=interpret,
+    )(Y, T, C)
+    return out[:, :n] if n_pad else out

@@ -1,0 +1,8 @@
+"""Launch: production meshes, multi-pod dry-run, training/serving drivers.
+
+NOTE: do not import repro.launch.dryrun from library code — it force-sets
+XLA_FLAGS device count at import time (dry-run entrypoint only).
+"""
+from repro.launch import mesh
+
+__all__ = ["mesh"]

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real (single) device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _mk(shape, axes):
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_qr_mesh(*, multi_pod: bool = False):
+    """1-D lane mesh for the paper's own CAQR workload (one lane per chip;
+    the tree spans the whole pod / both pods)."""
+    n = 512 if multi_pod else 256
+    return _mk((n,), ("qr",))
+
+
+def make_small_mesh(n_data: int = 4, n_model: int = 2):
+    """Test-sized mesh (subprocess tests with 8 host devices)."""
+    return _mk((n_data, n_model), ("data", "model"))

@@ -1,0 +1,4 @@
+"""Model zoo: unified transformer assembly for all assigned families."""
+from repro.models import api, attention, common, mlp, moe, rglru, ssm, transformer
+
+__all__ = ["api", "attention", "common", "mlp", "moe", "rglru", "ssm", "transformer"]

@@ -1,0 +1,90 @@
+"""Model-facing API: input specs per (arch x shape) cell and step builders.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for every model input of a cell — the dry-run
+lowers against these. Modality frontends are STUBS per the assignment:
+whisper gets precomputed frame embeddings, pixtral precomputed patch
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "long_500k skipped: arch has full-attention layers"
+    return True, ""
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.vlm is not None:
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vlm.n_patches, cfg.d_model), cfg.jdtype
+        )
+    if cfg.encoder is not None:
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), cfg.jdtype
+        )
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: tf.init_caches(cfg, B, S))
+    specs = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.encoder is not None:
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), cfg.jdtype
+        )
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """Abstract parameter tree (no allocation)."""
+    key = jax.eval_shape(lambda: jax.random.key(0))
+    return jax.eval_shape(lambda k: tf.init_params(cfg, k), key)
+
+
+def make_forward_loss(cfg: ModelConfig):
+    def fl(params, batch):
+        return tf.loss_fn(cfg, params, batch)
+
+    return fl
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, pos, caches, enc_out=None):
+        return tf.decode_step(cfg, params, caches, token, pos, enc_out=enc_out)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        hidden, caches, _ = tf.forward(
+            cfg, params, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"),
+            mode="prefill",
+        )
+        logits = tf.logits_fn(cfg, params, hidden[:, -1:])
+        return logits, caches
+
+    return prefill

@@ -1,0 +1,290 @@
+"""Attention token mixers: GQA/MQA, RoPE, sliding window, softcaps.
+
+Three execution paths:
+  * ``full``     — plain einsum attention (short sequences); (B,H,S,S) logits.
+  * ``chunked``  — blockwise streaming-softmax attention for long sequences:
+    queries are processed in chunks; for each query chunk only the causally
+    visible KV chunks are visited (triangular schedule — no masked-out flops,
+    the outer loop is unrolled so every inner scan has a static length).
+    Sliding-window attention visits only the chunks overlapping the window.
+  * ``decode``   — one query token against a (possibly rolling) KV cache;
+    softmax reductions run over the cache sequence dim, which may be sharded
+    (long_500k: flash-decode style, the partitioner inserts the all-reduce).
+
+All logits math in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ax
+from repro.models.common import rope, softcap
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, Kv, Dh)
+    v: jax.Array  # (B, S_cache, Kv, Dh)
+    # rolling caches (sliding-window layers): S_cache == window and writes
+    # wrap modulo the window.
+
+
+def _split_heads(q, k, v, n_kv: int):
+    """q: (B,S,H,Dh) -> (B, Kv, G, S, Dh); k/v: (B,S,Kv,Dh) -> (B,Kv,S,Dh)."""
+    B, S, H, Dh = q.shape
+    G = H // n_kv
+    q = q.reshape(B, S, n_kv, G, Dh).transpose(0, 2, 3, 1, 4)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _sdpa_block(q, k, v, bias, cap: Optional[float], scale: float):
+    """q (B,Kv,G,Sq,Dh), k/v (B,Kv,Skv,Dh), bias broadcastable (Sq,Skv)."""
+    logits = jnp.einsum(
+        "bkgsd,bktd->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    logits = softcap(logits, cap)
+    logits = logits + bias
+    return logits  # caller does the softmax variant it needs
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    n_kv: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+) -> jax.Array:
+    B, S, H, Dh = q.shape
+    S_kv = k.shape[1]
+    scale = Dh ** -0.5
+    qh, kh, vh = _split_heads(q, k, v, n_kv)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S_kv)[None, :]
+    mask = jnp.ones((S, S_kv), jnp.bool_)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    bias = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+    logits = _sdpa_block(qh, kh, vh, bias, cap, scale)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    n_kv: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    schedule: str = "tri",
+) -> jax.Array:
+    """Streaming-softmax attention over chunks.
+
+    schedule='tri'  — triangular Python-unrolled schedule: only causally
+        visible KV chunks are visited (no masked-out flops) and there is no
+        while op, so the dry-run's cost analysis counts every block.
+    schedule='scan' — double lax.scan (q outer, kv inner, masked): compact
+        HLO and tight buffer reuse; used by the memory-compile variant and
+        the production path.
+    """
+    B, S, H, Dh = q.shape
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    scale = Dh ** -0.5
+    qh, kh, vh = _split_heads(q, k, v, n_kv)  # (B,Kv,G,S,Dh), (B,Kv,S,Dh)
+    n_q = S // q_chunk
+    n_kvc = S // kv_chunk
+    G = H // n_kv
+
+    kc = kh.reshape(B, n_kv, n_kvc, kv_chunk, Dh)
+    vc = vh.reshape(B, n_kv, n_kvc, kv_chunk, Dh)
+
+    def block(carry, q_blk, q0, jk, k_blk, v_blk):
+        m, l, acc = carry
+        k0 = jk * kv_chunk
+        qi = q0 + jnp.arange(q_chunk)[:, None]
+        ki = k0 + jnp.arange(kv_chunk)[None, :]
+        mask = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+        if causal:
+            mask = mask & (ki <= qi)
+        if window is not None:
+            mask = mask & (ki > qi - window)
+        bias = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+        logits = _sdpa_block(q_blk, k_blk, v_blk, bias, cap, scale)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,bktd->bkgsd", p, v_blk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new)
+
+    def init_carry():
+        return (
+            jnp.full((B, n_kv, G, q_chunk), -1e30, jnp.float32),
+            jnp.zeros((B, n_kv, G, q_chunk), jnp.float32),
+            jnp.zeros((B, n_kv, G, q_chunk, Dh), jnp.float32),
+        )
+
+    if schedule == "scan":
+        qb = qh.reshape(B, n_kv, G, n_q, q_chunk, Dh)
+
+        def q_body(_, xs):
+            q_blk, iq = xs
+            q0 = iq * q_chunk
+
+            def kv_body(carry, kv_xs):
+                jk, k_blk, v_blk = kv_xs
+                new = block(carry, q_blk, q0, jk, k_blk, v_blk)
+                # skip fully-masked chunks cheaply: keep old carry when the
+                # chunk is entirely beyond the causal front
+                if causal:
+                    beyond = jk * kv_chunk > q0 + q_chunk - 1
+                    keep = lambda a, b: jnp.where(beyond, a, b)
+                    new = tuple(keep(c, n) for c, n in zip(carry, new))
+                return new, None
+
+            (m, l, acc), _ = jax.lax.scan(
+                kv_body, init_carry(),
+                (jnp.arange(n_kvc), kc.transpose(2, 0, 1, 3, 4),
+                 vc.transpose(2, 0, 1, 3, 4)),
+            )
+            return None, (acc / l[..., None]).astype(q.dtype)
+
+        _, out_blocks = jax.lax.scan(
+            q_body, None,
+            (qb.transpose(3, 0, 1, 2, 4, 5), jnp.arange(n_q)),
+        )
+        # (n_q, B, Kv, G, q_chunk, Dh) -> (B, Kv, G, S, Dh)
+        out = out_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, n_kv, G, S, Dh)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+    outs = []
+    for iq in range(n_q):
+        q_blk = jax.lax.dynamic_slice_in_dim(qh, iq * q_chunk, q_chunk, axis=3)
+        q0 = iq * q_chunk
+        # visible kv chunk range (static per q chunk)
+        hi = (q0 + q_chunk + kv_chunk - 1) // kv_chunk if causal else n_kvc
+        lo = 0
+        if window is not None:
+            # earliest query in this chunk (q0) still sees keys > q0 - window
+            lo = max(0, (q0 - window + 1) // kv_chunk)
+        carry = init_carry()
+        for jk in range(lo, hi):
+            carry = block(carry, q_blk, q0, jnp.asarray(jk), kc[:, :, jk], vc[:, :, jk])
+        m, l, acc = carry
+        outs.append((acc / l[..., None]).astype(q.dtype))
+
+    out = jnp.concatenate(outs, axis=3)  # (B,Kv,G,S,Dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+
+def decode_attention(
+    q1: jax.Array,            # (B, 1, H, Dh)
+    cache: KVCache,
+    pos: jax.Array,           # () current position (tokens already cached)
+    *,
+    n_kv: int,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention against the cache (already containing this step's
+    k/v at index pos % S_cache). Entries beyond pos are masked."""
+    B, S_cache, Kv, Dh = cache.k.shape
+    H = q1.shape[2]
+    G = H // n_kv
+    scale = Dh ** -0.5
+    qh = q1.reshape(B, 1, n_kv, G, Dh).transpose(0, 2, 3, 1, 4)  # (B,Kv,G,1,Dh)
+    kh = ax(cache.k.transpose(0, 2, 1, 3), "batch", "kv_heads", "kv_seq_shard", None)
+    vh = ax(cache.v.transpose(0, 2, 1, 3), "batch", "kv_heads", "kv_seq_shard", None)
+
+    idx = jnp.arange(S_cache)
+    if window is None:
+        valid = idx <= pos
+    else:
+        # rolling cache: all S_cache == window slots valid once warm
+        valid = (idx <= pos) | (pos >= S_cache)
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, :]
+    logits = _sdpa_block(qh, kh, vh, bias, cap, scale)  # (B,Kv,G,1,S)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q1.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, Dh)
+
+
+def cache_update(
+    cache: KVCache, k_new: jax.Array, v_new: jax.Array, pos: jax.Array
+) -> KVCache:
+    """Write this step's k/v (B,1,Kv,Dh) at pos (modulo rolling window)."""
+    S_cache = cache.k.shape[1]
+    slot = pos % S_cache
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    return KVCache(k=k, v=v)
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array   # (D, H*Dh)
+    wk: jax.Array   # (D, Kv*Dh)
+    wv: jax.Array   # (D, Kv*Dh)
+    wo: jax.Array   # (H*Dh, D)
+
+
+def attn_forward(
+    p: AttnParams,
+    x: jax.Array,                 # (B, S, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    chunked: bool = False,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    schedule: str = "scan",
+) -> jax.Array:
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = (x @ p.wq).reshape(B, S, n_heads, head_dim)
+    q = ax(q, "batch", None, "heads", None)
+    if kv_override is None:
+        k = (x @ p.wk).reshape(B, S, n_kv, head_dim)
+        v = (x @ p.wv).reshape(B, S, n_kv, head_dim)
+        if use_rope:
+            q = rope(q, positions, rope_theta)
+            k = rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+        if use_rope:
+            q = rope(q, positions, rope_theta)
+    k = ax(k, "batch", None, "kv_heads", None)
+    v = ax(v, "batch", None, "kv_heads", None)
+    if chunked:
+        o = chunked_attention(
+            q, k, v, n_kv=n_kv, causal=causal, window=window, cap=cap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, schedule=schedule,
+        )
+    else:
+        o = full_attention(q, k, v, n_kv=n_kv, causal=causal, window=window, cap=cap)
+    o = ax(o, "batch", None, "heads", None)
+    return o.reshape(B, S, n_heads * head_dim) @ p.wo

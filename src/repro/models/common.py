@@ -1,0 +1,59 @@
+"""Shared model components: norms, RoPE, activations, embeddings, init."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ax
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    if name == "swiglu" or name == "geglu":
+        raise ValueError("gated activations are handled in the MLP")
+    return {"gelu": jax.nn.gelu, "sq_relu": lambda x: jnp.square(jax.nn.relu(x)),
+            "relu": jax.nn.relu, "silu": jax.nn.silu}[name]
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array, scale: bool = False) -> jax.Array:
+    """Token embedding lookup; table (V, D) is vocab-sharded. The lookup is
+    a gather over the sharded dim — the partitioner turns it into a masked
+    local gather + all-reduce."""
+    out = jnp.take(table, tokens, axis=0)
+    if scale:
+        out = out * jnp.asarray(table.shape[1] ** 0.5, out.dtype)
+    return ax(out, "batch", "seq_shard", None)
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

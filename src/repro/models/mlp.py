@@ -1,0 +1,28 @@
+"""Channel mixers: gated / plain MLPs."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ax
+from repro.models.common import act_fn
+
+
+class MLPParams(NamedTuple):
+    w_in: jax.Array    # (D, F) — or gate proj for gated activations
+    w_gate: jax.Array  # (D, F) — zeros-shaped (0,0) when unused
+    w_out: jax.Array   # (F, D)
+
+
+def mlp_forward(p: MLPParams, x: jax.Array, activation: str) -> jax.Array:
+    if activation in ("swiglu", "geglu"):
+        gate = x @ p.w_gate
+        up = x @ p.w_in
+        gate = ax(gate, "batch", None, "ff")
+        up = ax(up, "batch", None, "ff")
+        inner = jax.nn.silu(gate) * up if activation == "swiglu" else jax.nn.gelu(gate) * up
+    else:
+        inner = ax(act_fn(activation)(x @ p.w_in), "batch", None, "ff")
+    return inner @ p.w_out

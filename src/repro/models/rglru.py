@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan (O(log S) depth); decode is a
+single step. The block wraps the LRU in the Griffin recurrent-block layout:
+in-proj (x, gate) -> temporal conv1d -> RG-LRU -> gated out-proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ax
+
+_C = 8.0  # the paper's fixed constant
+
+
+class RGLRUParams(NamedTuple):
+    w_in: jax.Array       # (D, 2*W)  -> (x branch, gate branch)
+    conv_w: jax.Array     # (conv_width, W) depthwise
+    w_a: jax.Array        # (W, W) recurrence-gate (block-diagonal in paper; dense here)
+    b_a: jax.Array        # (W,)
+    w_x: jax.Array        # (W, W) input-gate
+    b_x: jax.Array        # (W,)
+    a_param: jax.Array    # (W,)  Lambda
+    w_out: jax.Array      # (W, D)
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, W)
+    conv: jax.Array       # (B, conv_width-1, W)
+
+
+def _lru_scan(a: jax.Array, u: jax.Array, h0: Optional[jax.Array]):
+    """h_t = a_t * h_{t-1} + u_t via associative scan over S. a,u: (B,S,W)."""
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    if h0 is not None:
+        # fold h0 in as a virtual first element
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0[:, None], u], axis=1)
+        _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+        return h[:, 1:]
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def rglru_forward(
+    p: RGLRUParams,
+    x: jax.Array,  # (B, S, D)
+    *,
+    state: Optional[RGLRUState] = None,
+    return_state: bool = False,
+):
+    B, S, D = x.shape
+    W = p.w_out.shape[0]
+    xz = x @ p.w_in
+    xb, gate = jnp.split(xz, 2, axis=-1)  # (B,S,W) each
+    xb = ax(xb, "batch", None, "lru")
+
+    # temporal depthwise conv
+    cw = p.conv_w.shape[0]
+    if state is not None:
+        x_in = jnp.concatenate([state.conv, xb], axis=1)
+    else:
+        x_in = jnp.pad(xb, ((0, 0), (cw - 1, 0), (0, 0)))
+    new_conv_tail = x_in[:, -(cw - 1):]
+    acc = jnp.zeros_like(xb)
+    for c in range(cw):
+        acc = acc + x_in[:, c : c + S] * p.conv_w[c][None, None, :]
+    xb = acc
+
+    r = jax.nn.sigmoid(xb @ p.w_a + p.b_a)
+    i = jax.nn.sigmoid(xb @ p.w_x + p.b_x)
+    log_a = -_C * jax.nn.softplus(p.a_param.astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = (i * xb).astype(jnp.float32)
+    u = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    h0 = state.h.astype(jnp.float32) if state is not None else None
+    if S == 1 and state is not None:
+        h = (a[:, 0] * h0 + u[:, 0])[:, None]
+    else:
+        h = _lru_scan(a, u, h0)
+    h = h.astype(x.dtype)
+
+    out = (h * jax.nn.gelu(gate)) @ p.w_out
+    if return_state:
+        return out, RGLRUState(h=h[:, -1].astype(jnp.float32), conv=new_conv_tail)
+    return out

@@ -1,0 +1,173 @@
+"""Mamba2 SSD (state-space duality) block — attention-free token mixer.
+
+Chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060), matmul form:
+within-chunk "attention-like" term + inter-chunk state recurrence carried by
+a scan — this is the TPU-friendly formulation (all MXU work, O(S) memory).
+
+Decode maintains the per-head state h (B, H, P, N) and the conv window.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ax
+
+
+class SSMParams(NamedTuple):
+    w_in: jax.Array      # (D, d_inner*2 + 2*G*N + H)  fused input projection
+    conv_w: jax.Array    # (conv_width, conv_dim) depthwise conv
+    A_log: jax.Array     # (H,)
+    Dskip: jax.Array     # (H,)
+    dt_bias: jax.Array   # (H,)
+    norm_scale: jax.Array  # (d_inner,)
+    w_out: jax.Array     # (d_inner, D)
+
+
+class SSMState(NamedTuple):
+    h: jax.Array         # (B, H, P, N) SSD state
+    conv: jax.Array      # (B, conv_width-1, conv_dim) conv tail
+
+
+def _dims(cfg_d_model: int, ssm) -> Tuple[int, int, int, int, int]:
+    d_inner = ssm.expand * cfg_d_model
+    H = d_inner // ssm.head_dim
+    return d_inner, H, ssm.head_dim, ssm.n_groups, ssm.d_state
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)   (post-softplus)
+    A: jax.Array,    # (H,) negative
+    Bm: jax.Array,   # (B, S, G, N)
+    Cm: jax.Array,   # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)  # (B,nc,c,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]            # (B,nc,c,H) negative increments
+    cums = jnp.cumsum(dA, axis=2)                 # within-chunk cumulative
+    seg_end = cums[:, :, -1, :]                   # (B,nc,H) total chunk decay
+
+    # within-chunk (lower-triangular "attention" with decay kernel)
+    # L[s,t] = exp(cums[s] - cums[t]) for s >= t
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nc,s,t,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    # scores[s,t] = C_s . B_t
+    scores = jnp.einsum("bqchn,bqthn->bqcth", Cc, Bc.reshape(Bsz, nc, chunk, H, N))
+    # y_intra[s] = sum_t L[s,t] * scores[s,t] * dt_t * x_t
+    y_intra = jnp.einsum("bqcth,bqth,bqthp->bqchp", scores * L, dtc, xc)
+
+    # chunk state contributions: state_c = sum_t exp(seg_end - cums[t]) dt_t B_t x_t^T
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cums)    # (B,nc,c,H)
+    states = jnp.einsum(
+        "bqth,bqth,bqthp,bqthn->bqhpn", decay_to_end, dtc, xc,
+        Bc.reshape(Bsz, nc, chunk, H, N),
+    )  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over nc
+    def scan_fn(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * jnp.exp(dec)[:, :, None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    seg = seg_end.transpose(1, 0, 2)  # (nc,B,H)
+    sts = states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    h_final, h_prev = jax.lax.scan(scan_fn, h0, (sts, seg))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk output: y_inter[s] = exp(cums[s]) * C_s . h_prev
+    y_inter = jnp.einsum(
+        "bqchn,bqhpn->bqchp",
+        jnp.exp(cums)[..., None] * Cc.reshape(Bsz, nc, chunk, H, N),
+        h_prev.astype(Cc.dtype),
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssm_forward(
+    p: SSMParams,
+    x: jax.Array,   # (B, S, D)
+    *,
+    d_model: int,
+    ssm_cfg,
+    state: Optional[SSMState] = None,
+    return_state: bool = False,
+):
+    """Full Mamba2 block: in-proj -> conv -> SSD -> gated norm -> out-proj."""
+    B, S, D = x.shape
+    d_inner, H, P, G, N = _dims(d_model, ssm_cfg)
+    conv_dim = d_inner + 2 * G * N
+
+    zxbcdt = x @ p.w_in
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    # depthwise causal conv over (x, B, C) features
+    cw = p.conv_w.shape[0]
+    if state is not None:
+        xbc_in = jnp.concatenate([state.conv, xbc], axis=1)
+        new_conv_tail = xbc_in[:, -(cw - 1):]
+    else:
+        xbc_in = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+        new_conv_tail = xbc_in[:, -(cw - 1):]
+    # depthwise causal conv as cw shifted multiply-adds (materializing the
+    # (B, S, cw, conv_dim) window tensor costs GiBs at production shapes)
+    acc = jnp.zeros_like(xbc)
+    for c in range(cw):
+        acc = acc + xbc_in[:, c : c + S] * p.conv_w[c][None, None, :]
+    xbc_conv = jax.nn.silu(acc)
+
+    xs, Bm, Cm = jnp.split(xbc_conv, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    xs = ax(xs, "batch", None, "ssm_heads", None)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)  # (B,S,H)
+    A = -jnp.exp(p.A_log.astype(jnp.float32))
+
+    h0 = state.h if state is not None else None
+    if S == 1 and state is not None:
+        # decode fast path: one recurrence step, no chunking
+        dA = jnp.exp(dt[:, 0] * A[None, :])                    # (B,H)
+        inc = jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt[:, 0], xs[:, 0].astype(jnp.float32),
+            jnp.repeat(Bm[:, 0], H // G, axis=1).astype(jnp.float32),
+        )
+        h_new = state.h * dA[:, :, None, None] + inc
+        y = jnp.einsum(
+            "bhn,bhpn->bhp", jnp.repeat(Cm[:, 0], H // G, axis=1).astype(jnp.float32),
+            h_new,
+        )[:, None]  # (B,1,H,P)
+        y = y.astype(x.dtype)
+        h_final = h_new
+    else:
+        y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, min(ssm_cfg.chunk, S), h0)
+
+    y = y + xs * p.Dskip[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (mamba2 style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + p.norm_scale.astype(jnp.float32))
+    out = yf.astype(x.dtype) @ p.w_out
+    if return_state:
+        return out, SSMState(h=h_final, conv=new_conv_tail)
+    return out

@@ -1,0 +1,562 @@
+"""Unified LM assembly: heterogeneous layer stacks, scan-over-layers,
+training forward, prefill, and cached decode for every assigned family.
+
+Layer kinds come from ``ModelConfig.mixer_pattern`` / ``ffn_pattern``; the
+stack is scanned over *pattern periods* (groups), so HLO size is O(period),
+not O(n_layers) — 96-layer nemotron compiles the same graph size as a
+2-layer model. Heterogeneous caches (KV / SSM / LRU) are pytrees stacked
+over groups the same way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ax
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import rglru as rglrum
+from repro.models import ssm as ssmm
+from repro.models.common import embed, normal_init, rms_norm, softcap
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> attn.AttnParams:
+    D, H, Kv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return attn.AttnParams(
+        wq=normal_init(k1, (D, H * Dh), dtype),
+        wk=normal_init(k2, (D, Kv * Dh), dtype),
+        wv=normal_init(k3, (D, Kv * Dh), dtype),
+        wo=normal_init(k4, (H * Dh, D), dtype),
+    )
+
+
+def _init_mlp(key, cfg: ModelConfig, dtype) -> mlpm.MLPParams:
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.activation in ("swiglu", "geglu")
+    return mlpm.MLPParams(
+        w_in=normal_init(k1, (D, F), dtype),
+        w_gate=normal_init(k2, (D, F), dtype) if gated else jnp.zeros((1, 1), dtype),
+        w_out=normal_init(k3, (F, D), dtype),
+    )
+
+
+def _init_moe(key, cfg: ModelConfig, dtype) -> moem.MoEParams:
+    D = cfg.d_model
+    E, F = cfg.moe.n_experts, cfg.moe.d_ff_expert
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return moem.MoEParams(
+        w_router=normal_init(k1, (D, E), jnp.float32),
+        w_gate=normal_init(k2, (E, D, F), dtype),
+        w_in=normal_init(k3, (E, D, F), dtype),
+        w_out=normal_init(k4, (E, F, D), dtype),
+    )
+
+
+def _init_ssm(key, cfg: ModelConfig, dtype) -> ssmm.SSMParams:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner = s.expand * D
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    conv_dim = d_inner + 2 * G * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return ssmm.SSMParams(
+        w_in=normal_init(k1, (D, 2 * d_inner + 2 * G * N + H), dtype),
+        conv_w=normal_init(k2, (s.conv_width, conv_dim), dtype, scale=0.1),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        Dskip=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        norm_scale=jnp.zeros((d_inner,), dtype),
+        w_out=normal_init(k3, (d_inner, D), dtype),
+    )
+
+
+def _init_rglru(key, cfg: ModelConfig, dtype) -> rglrum.RGLRUParams:
+    r = cfg.rglru
+    D = cfg.d_model
+    W = r.lru_width or D
+    ks = jax.random.split(key, 5)
+    return rglrum.RGLRUParams(
+        w_in=normal_init(ks[0], (D, 2 * W), dtype),
+        conv_w=normal_init(ks[1], (r.conv_width, W), dtype, scale=0.1),
+        w_a=normal_init(ks[2], (W, W), dtype),
+        b_a=jnp.zeros((W,), dtype),
+        w_x=normal_init(ks[3], (W, W), dtype),
+        b_x=jnp.zeros((W,), dtype),
+        a_param=jnp.ones((W,), jnp.float32) * 0.5,
+        w_out=normal_init(ks[4], (W, D), dtype),
+    )
+
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn: str, cross: bool, dtype) -> Dict:
+    D = cfg.d_model
+    keys = jax.random.split(key, 4)
+    lp: Dict[str, Any] = {"norm1": jnp.zeros((D,), dtype)}
+    if mixer in ("G", "L"):
+        lp["attn"] = _init_attn(keys[0], cfg, dtype)
+    elif mixer == "M":
+        lp["ssm"] = _init_ssm(keys[0], cfg, dtype)
+    elif mixer == "R":
+        lp["lru"] = _init_rglru(keys[0], cfg, dtype)
+    if cross:
+        lp["cross_norm"] = jnp.zeros((D,), dtype)
+        lp["cross"] = _init_attn(keys[3], cfg, dtype)
+    if ffn != "N":
+        lp["norm2"] = jnp.zeros((D,), dtype)
+        lp["ffn"] = (
+            _init_moe(keys[1], cfg, dtype) if ffn == "E" else _init_mlp(keys[1], cfg, dtype)
+        )
+    if cfg.post_norms:
+        lp["post_norm1"] = jnp.zeros((D,), dtype)
+        if ffn != "N":
+            lp["post_norm2"] = jnp.zeros((D,), dtype)
+    return lp
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(period, n_groups, n_rem): layers = n_groups*period + n_rem."""
+    period = cfg.pattern_period if cfg.scan_layers else 1
+    if not cfg.scan_layers:
+        return 1, 0, cfg.n_layers
+    return period, cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    dtype = cfg.jdtype
+    period, n_groups, n_rem = _groups(cfg)
+    cross = cfg.encoder is not None
+    keys = jax.random.split(key, 8)
+
+    def group_params(k):
+        ks = jax.random.split(k, period)
+        return {
+            f"l{i}": _init_layer(
+                ks[i], cfg, cfg.mixer_at(i), cfg.ffn_at(i), cross, dtype
+            )
+            for i in range(period)
+        }
+
+    params: Dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if n_groups:
+        gk = jax.random.split(keys[1], n_groups)
+        params["groups"] = jax.vmap(group_params)(gk)
+    for r in range(n_rem):
+        li = n_groups * period + r
+        params[f"rem{r}"] = _init_layer(
+            jax.random.fold_in(keys[2], r), cfg, cfg.mixer_at(li), cfg.ffn_at(li),
+            cross, dtype,
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[3], (cfg.d_model, cfg.vocab), dtype)
+    if cfg.encoder is not None:
+        ek = jax.random.split(keys[4], cfg.encoder.n_layers + 2)
+        params["enc_pos"] = normal_init(ek[0], (cfg.encoder.n_frames, cfg.d_model), dtype)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, "G", "D", False, dtype)
+        )(jnp.stack(list(ek[1:-1])))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer(
+    cfg: ModelConfig,
+    mixer: str,
+    lp: Dict,
+    x: jax.Array,
+    *,
+    positions,
+    mode: str,
+    cache,
+    pos,
+    enc_kv=None,
+):
+    """Returns (out, new_cache)."""
+    window = cfg.sliding_window if mixer == "L" else None
+    S = x.shape[1]
+    if mixer in ("G", "L"):
+        if mode == "decode":
+            p: attn.AttnParams = lp["attn"]
+            B = x.shape[0]
+            Dh, H, Kv = cfg.hdim, cfg.n_heads, cfg.n_kv_heads
+            q = (x @ p.wq).reshape(B, 1, H, Dh)
+            k = (x @ p.wk).reshape(B, 1, Kv, Dh)
+            v = (x @ p.wv).reshape(B, 1, Kv, Dh)
+            pp = jnp.full((B, 1), pos)
+            q = attn.rope(q, pp, cfg.rope_theta)
+            k = attn.rope(k, pp, cfg.rope_theta)
+            new_cache = attn.cache_update(cache, k, v, pos)
+            o = attn.decode_attention(
+                q, new_cache, pos, n_kv=Kv, window=window, cap=cfg.attn_softcap
+            )
+            return o.reshape(B, 1, H * Dh) @ p.wo, new_cache
+        chunked = S >= cfg.attn_chunk_threshold
+        out = attn.attn_forward(
+            lp["attn"], x,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hdim,
+            rope_theta=cfg.rope_theta, causal=True, window=window,
+            cap=cfg.attn_softcap, positions=positions, chunked=chunked,
+            q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+            schedule=cfg.attn_schedule,
+        )
+        if mode == "prefill":
+            p = lp["attn"]
+            B = x.shape[0]
+            k = (x @ p.wk).reshape(B, S, cfg.n_kv_heads, cfg.hdim)
+            v = (x @ p.wv).reshape(B, S, cfg.n_kv_heads, cfg.hdim)
+            k = attn.rope(k, positions, cfg.rope_theta)
+            new_cache = attn.KVCache(k=k, v=v)
+            return out, new_cache
+        return out, None
+    if mixer == "M":
+        if mode == "decode" or mode == "prefill":
+            out, new_state = ssmm.ssm_forward(
+                lp["ssm"], x, d_model=cfg.d_model, ssm_cfg=cfg.ssm,
+                state=cache, return_state=True,
+            )
+            return out, new_state
+        return ssmm.ssm_forward(lp["ssm"], x, d_model=cfg.d_model, ssm_cfg=cfg.ssm), None
+    if mixer == "R":
+        if mode == "decode" or mode == "prefill":
+            out, new_state = rglrum.rglru_forward(
+                lp["lru"], x, state=cache, return_state=True
+            )
+            return out, new_state
+        return rglrum.rglru_forward(lp["lru"], x), None
+    raise ValueError(mixer)
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    mixer: str,
+    ffn: str,
+    lp: Dict,
+    x: jax.Array,
+    *,
+    positions,
+    mode: str,
+    cache,
+    pos,
+    enc_out=None,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    h, new_cache = _apply_mixer(
+        cfg, mixer, lp, h, positions=positions, mode=mode, cache=cache, pos=pos
+    )
+    if cfg.post_norms:
+        h = rms_norm(h, lp["post_norm1"], cfg.norm_eps)
+    x = x + h
+    if "cross" in lp and enc_out is not None:
+        hc = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+        p: attn.AttnParams = lp["cross"]
+        B, S, _ = hc.shape
+        F = enc_out.shape[1]
+        k = (enc_out @ p.wk).reshape(B, F, cfg.n_kv_heads, cfg.hdim)
+        v = (enc_out @ p.wv).reshape(B, F, cfg.n_kv_heads, cfg.hdim)
+        hc = attn.attn_forward(
+            p, hc, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hdim,
+            rope_theta=cfg.rope_theta, causal=False, positions=positions,
+            use_rope=False, kv_override=(k, v),
+        )
+        x = x + hc
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "N":
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if ffn == "E":
+            h2, aux = moem.moe_forward(
+                lp["ffn"], h2, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, activation=cfg.activation,
+                shards=cfg.moe_shards,
+            )
+        else:
+            h2 = mlpm.mlp_forward(lp["ffn"], h2, cfg.activation)
+        if cfg.post_norms:
+            h2 = rms_norm(h2, lp["post_norm2"], cfg.norm_eps)
+        x = x + h2
+    return ax(x, "batch", "seq_shard", None), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack application (scan over groups)
+# ---------------------------------------------------------------------------
+
+
+def _apply_stack(cfg, params, x, *, positions, mode, caches, pos, enc_out):
+    period, n_groups, n_rem = _groups(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def group_body(x, gp, gcache):
+        new_caches = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(period):
+            c = gcache.get(f"l{i}") if gcache else None
+            x, nc, a = _apply_layer(
+                cfg, cfg.mixer_at(i), cfg.ffn_at(i), gp[f"l{i}"], x,
+                positions=positions, mode=mode, cache=c, pos=pos, enc_out=enc_out,
+            )
+            new_caches[f"l{i}"] = nc
+            aux = aux + a
+        return x, new_caches, aux
+
+    have_caches = caches is not None
+    if n_groups:
+        K = cfg.remat_group if (mode == "train" and n_groups % cfg.remat_group == 0) else 1
+
+        def super_body(x, gps, gcaches):
+            """K consecutive layer-groups under one checkpoint span."""
+            new_caches = None
+            aux = jnp.zeros((), jnp.float32)
+            for k in range(K):
+                gp = jax.tree_util.tree_map(lambda t: t[k], gps)
+                gc = (jax.tree_util.tree_map(lambda t: t[k], gcaches)
+                      if gcaches is not None else None)
+                x, nc, a = group_body(x, gp, gc)
+                aux = aux + a
+            return x, new_caches, aux
+
+        def scan_body(carry, xs):
+            x, aux_t = carry
+            if have_caches:
+                gp, gcache = xs
+            else:
+                gp, gcache = xs, None
+            if K > 1:
+                body = super_body
+                if cfg.remat == "layer" and mode == "train":
+                    body = jax.checkpoint(super_body)
+                x, new_caches, aux = body(x, gp, gcache)
+            else:
+                body = group_body
+                if cfg.remat == "layer" and mode == "train":
+                    body = jax.checkpoint(group_body)
+                x, new_caches, aux = body(x, gp, gcache)
+            return (x, aux_t + aux), new_caches
+
+        xs = (params["groups"], caches["groups"]) if have_caches else params["groups"]
+        if K > 1:
+            xs = jax.tree_util.tree_map(
+                lambda t: t.reshape((n_groups // K, K) + t.shape[1:]), xs
+            )
+        (x, aux_total), new_group_caches = jax.lax.scan(
+            scan_body, (x, aux_total), xs,
+            unroll=(n_groups // K) if cfg.scan_unroll else 1,
+        )
+    else:
+        new_group_caches = None
+
+    new_caches = {"groups": new_group_caches}
+    for r in range(n_rem):
+        li = n_groups * period + r
+        c = caches.get(f"rem{r}") if caches else None
+        x, nc, a = _apply_layer(
+            cfg, cfg.mixer_at(li), cfg.ffn_at(li), params[f"rem{r}"], x,
+            positions=positions, mode=mode, cache=c, pos=pos, enc_out=enc_out,
+        )
+        new_caches[f"rem{r}"] = nc
+        aux_total = aux_total + a
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend): frames (B, F, D)."""
+    x = frames + params["enc_pos"][None]
+    F = x.shape[1]
+    positions = jnp.arange(F)[None]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h = attn.attn_forward(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hdim, rope_theta=cfg.rope_theta, causal=False,
+            positions=positions, use_rope=False,
+        )
+        x = x + h
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_forward(lp["ffn"], h2, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(
+        body, x, params["enc_layers"],
+        unroll=cfg.encoder.n_layers if cfg.scan_unroll else 1,
+    )
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,                     # (B, S)
+    *,
+    patch_embeds: Optional[jax.Array] = None,   # (B, n_patches, D) VLM stub
+    enc_frames: Optional[jax.Array] = None,     # (B, F, D) audio stub
+    mode: str = "train",
+    caches=None,
+    pos=None,
+):
+    """Returns (hidden (B,S,D), new_caches, aux_loss)."""
+    x = embed(tokens, params["embed"], scale=cfg.embed_scale)
+    if patch_embeds is not None:
+        np_ = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, np_:]], axis=1)
+    enc_out = None
+    if cfg.encoder is not None and enc_frames is not None:
+        enc_out = encode(cfg, params, enc_frames)
+    S = tokens.shape[1]
+    positions = (
+        jnp.arange(S)[None] if pos is None else jnp.full((1, S), pos)
+    )
+    x, new_caches, aux = _apply_stack(
+        cfg, params, x, positions=positions, mode=mode, caches=caches,
+        pos=pos, enc_out=enc_out,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def logits_fn(cfg: ModelConfig, params, hidden: jax.Array) -> jax.Array:
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table.astype(hidden.dtype))
+    logits = ax(logits, "batch", None, "vocab")
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Chunked-CE training loss. batch: tokens (B,S), labels (B,S) plus
+    optional modality stubs."""
+    hidden, _, aux = forward(
+        cfg, params, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        enc_frames=batch.get("enc_frames"),
+        mode="train",
+    )
+    B, S, D = hidden.shape
+    labels = batch["labels"]
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+
+    N = B * S
+    hf = hidden.reshape(N, D)
+    lf = labels.reshape(N)
+    chunk = min(cfg.loss_chunk, N)
+    n_chunks = max(N // chunk, 1)
+    assert N % chunk == 0 or n_chunks == 1, (N, chunk)
+
+    def ce_chunk(h, l):
+        logits = jnp.einsum("nd,vd->nv", h, table.astype(h.dtype))
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logits = ax(logits, None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, l[:, None], axis=-1)[:, 0]
+        return jnp.sum(lse - picked)
+
+    if n_chunks == 1:
+        total = ce_chunk(hf, lf)
+    else:
+        def body(acc, xs):
+            h, l = xs
+            return acc + ce_chunk(h, l), None
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (hf.reshape(n_chunks, chunk, D), lf.reshape(n_chunks, chunk)),
+            unroll=n_chunks if cfg.scan_unroll else 1,
+        )
+    loss = total / N + 0.01 * aux
+    return loss, {"ce": total / N, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero caches for decode at cache length ``seq_len`` (sliding-window
+    layers get a rolling cache of window size)."""
+    period, n_groups, n_rem = _groups(cfg)
+    dtype = cfg.jdtype
+
+    def layer_cache(mixer):
+        if mixer == "G":
+            S_c = seq_len
+        elif mixer == "L":
+            S_c = min(cfg.sliding_window, seq_len)
+        elif mixer == "M":
+            s = cfg.ssm
+            d_inner = s.expand * cfg.d_model
+            H = d_inner // s.head_dim
+            conv_dim = d_inner + 2 * s.n_groups * s.d_state
+            return ssmm.SSMState(
+                h=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+                conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+            )
+        elif mixer == "R":
+            W = (cfg.rglru.lru_width or cfg.d_model)
+            return rglrum.RGLRUState(
+                h=jnp.zeros((batch, W), jnp.float32),
+                conv=jnp.zeros((batch, cfg.rglru.conv_width - 1, W), dtype),
+            )
+        else:
+            raise ValueError(mixer)
+        return attn.KVCache(
+            k=jnp.zeros((batch, S_c, cfg.n_kv_heads, cfg.hdim), dtype),
+            v=jnp.zeros((batch, S_c, cfg.n_kv_heads, cfg.hdim), dtype),
+        )
+
+    def group_caches(_):
+        return {f"l{i}": layer_cache(cfg.mixer_at(i)) for i in range(period)}
+
+    caches = {}
+    if n_groups:
+        caches["groups"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            group_caches(0),
+        )
+    for r in range(n_rem):
+        li = n_groups * period + r
+        caches[f"rem{r}"] = layer_cache(cfg.mixer_at(li))
+    return caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    caches,
+    token: jax.Array,   # (B, 1)
+    pos: jax.Array,     # ()
+    *,
+    enc_out: Optional[jax.Array] = None,
+):
+    """One token of cached decoding. Returns (logits (B,1,V), new_caches)."""
+    x = embed(token, params["embed"], scale=cfg.embed_scale)
+    x, new_caches, _ = _apply_stack(
+        cfg, params, x, positions=jnp.full((1, 1), pos), mode="decode",
+        caches=caches, pos=pos, enc_out=enc_out,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_fn(cfg, params, x), new_caches

@@ -1,0 +1,9 @@
+"""Optimizers: AdamW, CAQR-Muon (TSQR-orthogonalized momentum), PowerSGD-QR
+gradient compression, schedules.
+
+Import the factory functions from their modules (``repro.optim.adamw.adamw``)
+— the package namespace exposes only the submodules to avoid shadowing.
+"""
+from repro.optim import adamw, caqr_muon, powersgd, schedule
+
+__all__ = ["adamw", "caqr_muon", "powersgd", "schedule"]

@@ -1,0 +1,84 @@
+"""Adafactor (simplified): factored second moments, no first moment.
+
+The memory-frugal optimizer for the trillion-parameter dry-run cells
+(kimi-k2): optimizer state is O(m+n) per (m, n) weight instead of O(2*m*n)
+f32 — the difference between fitting and not fitting 1T params on 512
+v5e chips (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row second moments (or full v for <2D leaves)
+    vc: Any   # col second moments (zeros((0,)) for <2D leaves)
+
+
+def adafactor(
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        tm = jax.tree_util.tree_map
+
+        def vr0(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc0(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32), vr=tm(vr0, params), vc=tm(vc0, params)
+        )
+
+    def update(grads, state: AdafactorState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        tm = jax.tree_util.tree_map
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr_new[..., None]
+                    * vc_new[..., None, :]
+                    / jnp.mean(vr_new, axis=-1, keepdims=True)[..., None]
+                )
+            else:
+                vr_new = beta * vr + (1 - beta) * g2
+                vc_new = vc
+                denom = jnp.sqrt(vr_new)
+            u = g / jnp.maximum(denom, eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), vr_new, vc_new
+
+        updates = tm(lambda g, vr, vc, p: upd(g, vr, vc, p)[0],
+                     grads, state.vr, state.vc, params)
+        vr = tm(lambda g, vr, vc, p: upd(g, vr, vc, p)[1],
+                grads, state.vr, state.vc, params)
+        vc = tm(lambda g, vr, vc, p: upd(g, vr, vc, p)[2],
+                grads, state.vr, state.vc, params)
+        return updates, AdafactorState(step=step, vr=vr, vc=vc)
+
+    return Optimizer(init=init, update=update)

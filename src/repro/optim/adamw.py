@@ -1,0 +1,56 @@
+"""AdamW (functional, optax-style but self-contained)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+class Optimizer(NamedTuple):
+    init: Any
+    update: Any
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def update(grads, state: AdamWState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        tm = jax.tree_util.tree_map
+        mu = tm(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                grads, state.mu)
+        nu = tm(lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                grads, state.nu)
+
+        def delta(m, v, p):
+            m_hat = m / (1 - b1 ** t)
+            v_hat = v / (1 - b2 ** t)
+            d = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * d).astype(p.dtype)
+
+        updates = tm(delta, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

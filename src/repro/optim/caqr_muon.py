@@ -1,0 +1,113 @@
+"""CAQR-Muon: momentum orthogonalized by the paper's TSQR.
+
+Muon-style optimizer for 2-D weights: the momentum matrix is replaced by an
+orthonormal matrix with the same column space before the update. Where Muon
+uses Newton-Schulz to approximate the polar factor, we use the *thin-QR Q*
+computed by the paper's TSQR — the sequential chain on one host (XLA
+partitions it under GSPMD), with the FT-butterfly ``dist_orthonormalize``
+available for explicit shard_map use (the training framework's first-class
+use of the paper's primitive: every model-parallel rank finishes with the
+replicated R, so a failed rank's optimizer step is reconstructible from any
+buddy).
+
+Embeddings / lm_head / non-2D params fall back to Adam-style scaling, per
+standard Muon practice. Stacked layer groups (G, D, F) and MoE expert banks
+(E, D, F) are orthogonalized per slice via vmap.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tsqr import tsqr_orthonormalize
+from repro.optim.adamw import Optimizer
+
+_EXCLUDE = ("embed", "lm_head", "enc_pos")
+
+
+class MuonState(NamedTuple):
+    step: jax.Array
+    mom: Any   # f32 momentum (all params)
+    nu: Any    # adam second moment (used on the non-muon subset)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _is_muon(path, p) -> bool:
+    if any(e in _path_str(path) for e in _EXCLUDE):
+        return False
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def _orth2d(M: jax.Array, tile_rows: int = 512) -> jax.Array:
+    m, n = M.shape
+    tall = m >= n
+    A = M if tall else M.T
+    rows, cols = A.shape
+    tile = rows
+    for cand in (tile_rows, 256, 128, 64):
+        if rows % cand == 0 and cand >= cols:
+            tile = cand
+            break
+    Q, _ = tsqr_orthonormalize(A, tile)
+    return Q if tall else Q.T
+
+
+def _orth(M: jax.Array) -> jax.Array:
+    if M.ndim == 2:
+        return _orth2d(M)
+    lead = M.shape[:-2]
+    flat = M.reshape((-1,) + M.shape[-2:])
+    return jax.vmap(_orth2d)(flat).reshape(lead + M.shape[-2:])
+
+
+def caqr_muon(
+    b1: float = 0.95,
+    adam_b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    adam_scale: float = 0.3,
+) -> Optimizer:
+    def init(params):
+        tm = jax.tree_util.tree_map
+        mom = tm(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        nu = tm(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return MuonState(step=jnp.zeros((), jnp.int32), mom=mom, nu=nu)
+
+    def update(grads, state: MuonState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        tmp = jax.tree_util.tree_map_with_path
+
+        def upd_mom(path, g, m, p):
+            if _is_muon(path, p):
+                return b1 * m + g.astype(jnp.float32)
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def upd_nu(path, g, v, p):
+            if _is_muon(path, p):
+                return v
+            return adam_b2 * v + (1 - adam_b2) * jnp.square(g.astype(jnp.float32))
+
+        mom = tmp(upd_mom, grads, state.mom, params)
+        nu = tmp(upd_nu, grads, state.nu, params)
+
+        def delta(path, p, m, v):
+            if _is_muon(path, p):
+                O = _orth(m)
+                scale = jnp.sqrt(jnp.maximum(1.0, p.shape[-2] / p.shape[-1]))
+                d = O * scale + weight_decay * p.astype(jnp.float32)
+                return (-lr * d).astype(p.dtype)
+            m_hat = m / (1 - b1 ** t)
+            v_hat = v / (1 - adam_b2 ** t)
+            d = m_hat / (jnp.sqrt(v_hat) + eps)
+            return (-lr * adam_scale * d).astype(p.dtype)
+
+        updates = tmp(delta, params, mom, nu)
+        return updates, MuonState(step=step, mom=mom, nu=nu)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+"""Serving engine: prefill + batched cached decode."""
+from repro.serve.engine import Engine, ServeConfig
+__all__ = ["Engine", "ServeConfig"]

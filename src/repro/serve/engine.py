@@ -1,0 +1,137 @@
+"""Batched serving engine: prefill -> cached decode with sampling.
+
+Static-batch engine (slots = batch rows): prefill a batch of prompts, then
+step all slots together; finished slots (EOS or max length) keep decoding
+into a sink but are masked from the outputs. Sliding-window layers convert
+the prefill cache into rolling form (roll by S0 mod window) so decode's
+``pos % window`` addressing lines up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models import attention as attn
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0   # 0 = greedy
+    eos_id: int = -1           # -1 = never stop early
+    cache_len: int = 0         # 0 = prompt_len + max_new_tokens
+    seed: int = 0
+
+
+def _prefill_to_decode_caches(cfg: ModelConfig, caches, prompt_len: int, cache_len: int):
+    """Convert full prefill KV caches to decode layout: pad/crop to
+    cache_len; rolling layers keep the last `window` entries rolled into
+    pos%window order. SSM/LRU states pass through."""
+
+    def conv(c):
+        if isinstance(c, attn.KVCache):
+            # seq dim is axis -3 ((..., S, Kv, Dh)); a leading group axis may
+            # be present when layers are scanned.
+            S_full = c.k.shape[-3]
+            nd = c.k.ndim
+            if cache_len >= S_full:
+                pad = [(0, 0)] * nd
+                pad[-3] = (0, cache_len - S_full)
+                return attn.KVCache(k=jnp.pad(c.k, pad), v=jnp.pad(c.v, pad))
+            # rolling layers: keep last cache_len entries at pos%window slots
+            w = cache_len
+            sl = (Ellipsis, slice(S_full - w, S_full), slice(None), slice(None))
+            k = jnp.roll(c.k[sl], prompt_len % w, axis=-3)
+            v = jnp.roll(c.v[sl], prompt_len % w, axis=-3)
+            return attn.KVCache(k=k, v=v)
+        return c
+
+    return jax.tree_util.tree_map(
+        conv, caches, is_leaf=lambda x: isinstance(x, (attn.KVCache,))
+    )
+
+
+def _layer_cache_len(cfg: ModelConfig, mixer: str, total_len: int) -> int:
+    if mixer == "L":
+        return min(cfg.sliding_window, total_len)
+    return total_len
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, scfg: Optional[ServeConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg or ServeConfig()
+        self._prefill = jax.jit(api.make_prefill(cfg))
+        self._step = jax.jit(api.make_serve_step(cfg))
+
+    def generate(self, prompts: np.ndarray, extras: Optional[Dict] = None) -> np.ndarray:
+        """prompts: (B, S0) int32. Returns (B, max_new_tokens)."""
+        cfg, scfg = self.cfg, self.scfg
+        B, S0 = prompts.shape
+        total = scfg.cache_len or (S0 + scfg.max_new_tokens)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = tf.encode(cfg, self.params, batch["enc_frames"])
+
+        logits, caches = self._prefill(self.params, batch)
+
+        # re-key prefill caches into decode layout per layer kind
+        period, n_groups, n_rem = tf._groups(cfg)
+
+        def relayout(c, mixer):
+            if not isinstance(c, attn.KVCache):
+                return c
+            tgt = _layer_cache_len(cfg, mixer, total)
+            return _prefill_to_decode_caches(cfg, c, S0, tgt)
+
+        # caches structure: {"groups": {l{i}: cache}, rem{r}: cache}
+        new_caches = {}
+        if caches.get("groups") is not None:
+            g = {}
+            for i in range(period):
+                g[f"l{i}"] = relayout(caches["groups"][f"l{i}"], cfg.mixer_at(i))
+            new_caches["groups"] = g
+        for r in range(cfg.n_layers % period if cfg.scan_layers else cfg.n_layers):
+            li = n_groups * period + r
+            key = f"rem{r}"
+            if key in caches:
+                new_caches[key] = relayout(caches[key], cfg.mixer_at(li))
+        caches = new_caches
+
+        key = jax.random.key(scfg.seed)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out: List[np.ndarray] = []
+        done = np.zeros((B,), bool)
+        for t in range(scfg.max_new_tokens):
+            pos = jnp.asarray(S0 + t, jnp.int32)
+            args = (self.params, tok, pos, caches)
+            if cfg.encoder is not None:
+                logits, caches = self._step(*args, enc_out)
+            else:
+                logits, caches = self._step(*args)
+            lg = logits[:, -1]
+            if scfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, lg / scfg.temperature)[:, None]
+            else:
+                tok = jnp.argmax(lg, axis=-1)[:, None]
+            tok = tok.astype(jnp.int32)
+            step_out = np.asarray(tok[:, 0])
+            step_out = np.where(done, scfg.eos_id, step_out)
+            out.append(step_out)
+            if scfg.eos_id >= 0:
+                done |= step_out == scfg.eos_id
+                if done.all():
+                    break
+        return np.stack(out, axis=1)

@@ -1,0 +1,4 @@
+"""Training: step builders + fault-tolerant loop."""
+from repro.train.loop import TrainConfig, Trainer
+from repro.train.step import TrainState, make_train_step, make_pod_train_step
+__all__ = ["TrainConfig", "Trainer", "TrainState", "make_train_step", "make_pod_train_step"]

@@ -1,0 +1,156 @@
+"""Training loop with the fault-tolerance supervisor.
+
+The loop drives logical data-parallel lanes through deterministic data,
+takes diskless (buddy) checkpoints of the full training state every
+``diskless_every`` steps plus periodic disk checkpoints, and reacts to
+detected lane failures with the configured FT-MPI semantics (paper §II):
+
+  REBUILD — restore params+opt from the buddy store, rewind the data
+            pipeline to the checkpointed step and replay: training continues
+            *bit-identical* to a failure-free run (the integration test
+            asserts exact equality).
+  SHRINK  — drop the lane: the global batch loses its rows, survivors
+            renumber, training continues on the smaller world.
+  BLANK   — keep the hole: the dead lane's rows are masked out of each
+            batch (loss renormalized), ranks unchanged.
+  ABORT   — re-raise (the non-FT default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import diskless, save
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.ft.failures import Detector, FailureSchedule
+from repro.ft.semantics import Semantics
+from repro.models import transformer as tf
+import repro.optim.adamw as adamw_mod
+from repro.optim.schedule import warmup_cosine
+from repro.train.step import TrainState, make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-3
+    warmup: int = 10
+    grad_accum: int = 1
+    n_lanes: int = 4                  # logical data-parallel lanes
+    diskless_every: int = 5
+    ckpt_every: int = 0               # 0 = no disk checkpoints
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    semantics: Semantics = Semantics.REBUILD
+    optimizer: str = "adamw"          # adamw | caqr_muon
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig):
+        self.cfg, self.tcfg, self.dcfg = cfg, tcfg, dcfg
+        assert dcfg.global_batch % tcfg.n_lanes == 0
+        if tcfg.optimizer == "caqr_muon":
+            from repro.optim.caqr_muon import caqr_muon
+
+            self.opt = caqr_muon()
+        else:
+            self.opt = adamw_mod.adamw()
+        lr_fn = warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+        self._step_fn = jax.jit(
+            make_train_step(cfg, self.opt, lr_fn, tcfg.grad_accum)
+        )
+        params = tf.init_params(cfg, jax.random.key(tcfg.seed))
+        self.state = TrainState(params, self.opt.init(params), jnp.zeros((), jnp.int32))
+        self.buddy = diskless.BuddyStore(max(tcfg.n_lanes, 2))
+        self.detector = Detector(tcfg.n_lanes)
+        self.active_lanes: List[int] = list(range(tcfg.n_lanes))
+        self.blanked: List[int] = []
+        self._last_diskless_step = -1
+        self.history: List[Dict] = []
+
+    # -- diskless checkpoint of the full training state ---------------------
+    def _push_diskless(self, step: int) -> None:
+        for lane in self.active_lanes:
+            self.buddy.push(lane, {"state": self.state, "step": step})
+        self._last_diskless_step = step
+
+    def _restore_diskless(self, failed: int) -> int:
+        blob = self.buddy.recover(failed)
+        self.state = jax.tree_util.tree_map(jnp.asarray, blob["state"])
+        return int(blob["step"])
+
+    # -- failure handling ----------------------------------------------------
+    def _handle_failures(self, step: int, lanes: List[int]) -> int:
+        """Returns the (possibly rewound) step to continue from."""
+        sem = self.tcfg.semantics
+        if sem == Semantics.ABORT:
+            raise RuntimeError(f"lanes {lanes} failed at step {step}; ABORT")
+        if sem == Semantics.REBUILD:
+            resume = step
+            for lane in lanes:
+                ck_step = self._restore_diskless(lane)
+                resume = min(resume, ck_step)
+                self.detector.revive(lane)
+            return resume  # deterministic data replay from the ckpt step
+        if sem == Semantics.SHRINK:
+            for lane in lanes:
+                self.active_lanes.remove(lane)
+            assert self.active_lanes, "all lanes dead"
+            return step
+        if sem == Semantics.BLANK:
+            self.blanked.extend(lanes)
+            return step
+        raise ValueError(sem)
+
+    def _lane_batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Assemble the global batch from the rows of live lanes."""
+        per = self.dcfg.global_batch // self.tcfg.n_lanes
+        full = make_batch(self.dcfg, step)
+        rows = []
+        for lane in range(self.tcfg.n_lanes):
+            if lane in self.blanked or lane not in self.active_lanes:
+                continue
+            rows.append(slice(lane * per, (lane + 1) * per))
+        sel = np.concatenate([np.r_[r] for r in rows])
+        return {k: jnp.asarray(v[sel]) for k, v in full.items()}
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, schedule: Optional[FailureSchedule] = None) -> List[Dict]:
+        self.detector.schedule = schedule or FailureSchedule()
+        step = 0
+        while step < self.tcfg.steps:
+            newly_dead = self.detector.begin_step(step)
+            if newly_dead:
+                step = self._handle_failures(step, newly_dead)
+            if step % self.tcfg.diskless_every == 0:
+                self._push_diskless(step)
+            if self.tcfg.ckpt_every and step and step % self.tcfg.ckpt_every == 0:
+                save.save_async(
+                    self.tcfg.ckpt_dir, step, self.state.params,
+                    self.state.opt_state, {"data_step": step},
+                )
+            batch = self._lane_batch(step)
+            t0 = time.perf_counter()
+            self.state, metrics = self._step_fn(self.state, batch)
+            dt = time.perf_counter() - t0
+            rec = {
+                "step": step,
+                "loss": float(metrics["loss"]),
+                "lanes": len(self.active_lanes) - len(self.blanked),
+                "dt": dt,
+            }
+            self.history.append(rec)
+            if step % self.tcfg.log_every == 0:
+                print(
+                    f"step {step:5d} loss {rec['loss']:.4f} "
+                    f"lanes {rec['lanes']} {dt*1e3:.1f}ms"
+                )
+            step += 1
+        return self.history

@@ -1,0 +1,136 @@
+"""Train-step builders.
+
+``make_train_step``      — jit/GSPMD step: loss + grad + optimizer update,
+                           optional microbatch gradient accumulation.
+``make_pod_train_step``  — the multi-pod variant: shard_map over the 'pod'
+                           axis only (everything else stays auto-partitioned
+                           inside), so the cross-pod gradient reduction is
+                           explicit and can run through PowerSGD-QR
+                           compression (rank-r TSQR, r*(m+n) wire bytes
+                           instead of m*n) — the paper's primitive on the
+                           slowest links of the system.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+import repro.optim.adamw as adamw_mod
+from repro.optim import powersgd
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    lr_fn: Callable,
+    grad_accum: int = 1,
+):
+    loss_fn = api.make_forward_loss(cfg)
+
+    def step(state: TrainState, batch):
+        def lg(params, b):
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+
+        if grad_accum == 1:
+            (loss, metrics), grads = lg(state.params, batch)
+        else:
+            # microbatch scan over the leading batch dim
+            def mb(carry, b):
+                (l, g) = carry
+                (li, _), gi = lg(state.params, b)
+                return (l + li, jax.tree_util.tree_map(jnp.add, g, gi)), None
+
+            B = batch["tokens"].shape[0]
+            assert B % grad_accum == 0
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, B // grad_accum) + x.shape[1:]),
+                batch,
+            )
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss, grads), _ = jax.lax.scan(mb, (jnp.zeros(()), zero), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = {}
+
+        lr = lr_fn(state.step)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params, lr)
+        params = adamw_mod.apply_updates(state.params, updates)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+        return TrainState(params, opt_state, state.step + 1), {
+            "loss": loss, "lr": lr, "gnorm": gnorm,
+        }
+
+    return step
+
+
+class PodTrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    psgd: Any
+    step: jax.Array
+
+
+def make_pod_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    lr_fn: Callable,
+    mesh,
+    *,
+    compression_rank: int = 0,
+):
+    """shard_map over 'pod'; per-pod grads reduced explicitly (pmean or
+    PowerSGD-QR). Params replicated across pods; inner axes stay automatic."""
+    from jax.sharding import PartitionSpec as P
+
+    loss_fn = api.make_forward_loss(cfg)
+    compress = compression_rank > 0
+
+    def per_pod(state: PodTrainState, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        if compress:
+            grads, new_psgd = powersgd.compress_tree(
+                grads, state.psgd, "pod", rank=compression_rank
+            )
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, "pod"), grads
+            )
+            new_psgd = state.psgd
+        loss = jax.lax.pmean(loss, "pod")
+        lr = lr_fn(state.step)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params, lr)
+        params = adamw_mod.apply_updates(state.params, updates)
+        return PodTrainState(params, opt_state, new_psgd, state.step + 1), {
+            "loss": loss, "lr": lr,
+        }
+
+    state_specs = PodTrainState(
+        params=P(), opt_state=P(), psgd=P(), step=P()
+    )
+    step = jax.shard_map(
+        per_pod,
+        mesh=mesh,
+        in_specs=(state_specs, P("pod")),
+        out_specs=(state_specs, P()),
+        axis_names={"pod"},
+        check_vma=False,
+    )
+    return step

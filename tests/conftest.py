@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+(single) device; multi-device tests spawn subprocesses."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def signfix(R):
+    import numpy as np
+    s = np.sign(np.diag(R))
+    s = np.where(s == 0, 1.0, s)
+    return R * s[:, None]

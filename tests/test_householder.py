@@ -1,0 +1,84 @@
+"""Unit tests: Householder / compact-WY substrate."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    apply_q, apply_qt, householder_qr, householder_qr_masked, q_dense,
+    stacked_apply_qt, stacked_qr,
+)
+
+
+def _signfix(R):
+    s = np.sign(np.diag(R))
+    s = np.where(s == 0, 1.0, s)
+    return R * s[:, None]
+
+
+@pytest.mark.parametrize("m,n", [(8, 4), (64, 16), (96, 32), (128, 128)])
+def test_qr_matches_lapack(rng, m, n):
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    wy = householder_qr(A)
+    Rr = np.linalg.qr(np.asarray(A), mode="r")
+    np.testing.assert_allclose(
+        _signfix(np.asarray(wy.R)), _signfix(Rr), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_qt_a_is_r(rng):
+    A = jnp.asarray(rng.standard_normal((96, 32)), jnp.float32)
+    wy = householder_qr(A)
+    QtA = apply_qt(wy.Y, wy.T, A)
+    np.testing.assert_allclose(np.asarray(QtA[:32]), np.asarray(wy.R), atol=3e-5)
+    assert np.abs(np.asarray(QtA[32:])).max() < 3e-5
+
+
+def test_q_orthogonal(rng):
+    A = jnp.asarray(rng.standard_normal((64, 24)), jnp.float32)
+    wy = householder_qr(A)
+    Q = np.asarray(q_dense(wy.Y, wy.T))
+    np.testing.assert_allclose(Q.T @ Q, np.eye(64), atol=5e-6)
+
+
+def test_q_qt_roundtrip(rng):
+    A = jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((48, 8)), jnp.float32)
+    wy = householder_qr(A)
+    back = apply_q(wy.Y, wy.T, apply_qt(wy.Y, wy.T, C))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(C), atol=5e-6)
+
+
+def test_masked_respects_frozen_rows(rng):
+    A = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    wy = householder_qr_masked(A, jnp.asarray(16))
+    assert np.abs(np.asarray(wy.Y[:16])).max() == 0.0
+    Rr = np.linalg.qr(np.asarray(A)[16:], mode="r")
+    np.testing.assert_allclose(
+        _signfix(np.asarray(wy.R)), _signfix(Rr), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_degenerate_zero_matrix():
+    A = jnp.zeros((32, 8), jnp.float32)
+    wy = householder_qr(A)
+    assert np.all(np.isfinite(np.asarray(wy.Y)))
+    assert np.abs(np.asarray(wy.R)).max() == 0.0
+
+
+def test_stacked_qr_structure(rng):
+    b = 16
+    R1 = jnp.triu(jnp.asarray(rng.standard_normal((b, b)), jnp.float32))
+    R2 = jnp.triu(jnp.asarray(rng.standard_normal((b, b)), jnp.float32))
+    sq = stacked_qr(R1, R2)
+    # Y2 strictly upper triangular structure
+    assert np.abs(np.tril(np.asarray(sq.Y2), -1)).max() == 0.0
+    S = np.concatenate([np.asarray(R1), np.asarray(R2)])
+    Rr = np.linalg.qr(S, mode="r")
+    np.testing.assert_allclose(
+        _signfix(np.asarray(sq.R)), _signfix(Rr), rtol=2e-4, atol=2e-4
+    )
+    # applying Q^T to the stack reproduces [R; 0]
+    ct, cb, W = stacked_apply_qt(sq, R1, R2)
+    np.testing.assert_allclose(np.asarray(ct), np.asarray(sq.R), atol=3e-5)
+    assert np.abs(np.asarray(cb)).max() < 3e-5

@@ -1,0 +1,54 @@
+"""Least-squares on FT-CAQR + straggler mitigation."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimComm
+from repro.core.lstsq import caqr_lstsq
+from repro.ft.stragglers import StragglerConfig, StragglerMonitor, StragglerPolicy
+
+
+def test_caqr_lstsq_matches_numpy(rng):
+    P, m_loc, n, b = 8, 32, 64, 8
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+    bvec = jnp.asarray(rng.standard_normal((P, m_loc, 3)), jnp.float32)
+    x = caqr_lstsq(A, bvec, SimComm(P), b)
+    Af = np.asarray(A).reshape(-1, n)
+    bf = np.asarray(bvec).reshape(-1, 3)
+    x_ref, *_ = np.linalg.lstsq(Af, bf, rcond=None)
+    np.testing.assert_allclose(np.asarray(x), x_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_caqr_lstsq_exact_on_consistent_system(rng):
+    P, m_loc, n, b = 4, 16, 16, 4
+    x_true = rng.standard_normal((n, 2)).astype(np.float32)
+    A = rng.standard_normal((P * m_loc, n)).astype(np.float32)
+    bvec = A @ x_true
+    x = caqr_lstsq(
+        jnp.asarray(A.reshape(P, m_loc, n)),
+        jnp.asarray(bvec.reshape(P, m_loc, 2)),
+        SimComm(P), b,
+    )
+    np.testing.assert_allclose(np.asarray(x), x_true, rtol=5e-3, atol=5e-3)
+
+
+def test_straggler_detection_and_rebalance():
+    mon = StragglerMonitor(4, StragglerConfig(threshold=1.4, patience=2))
+    # lane 2 persistently 2x slower
+    actions = []
+    for _ in range(4):
+        actions = mon.report({0: 1.0, 1: 1.05, 2: 2.2, 3: 0.95})
+    assert actions == [2]
+    shares = mon.rebalance(2)
+    assert shares[2] < 1.0
+    assert abs(sum(shares.values()) - 4.0) < 1e-6
+    rows = mon.lane_rows(64)
+    assert sum(rows.values()) == 64
+    assert rows[2] < rows[0]
+
+
+def test_straggler_no_false_positive():
+    mon = StragglerMonitor(4)
+    for _ in range(10):
+        acts = mon.report({i: 1.0 + 0.05 * i for i in range(4)})
+        assert acts == []

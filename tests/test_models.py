@@ -1,0 +1,149 @@
+"""Per-arch smoke tests (reduced configs of the same family, one device):
+one forward/train step asserting output shapes + no NaNs, plus decode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, get_smoke
+from repro.models import api
+from repro.models import transformer as tf
+
+
+def _batch(cfg, rng, B=2, S=16):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.vlm is not None:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vlm.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.encoder is not None:
+        batch["enc_frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder.n_frames, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step(rng, arch):
+    cfg = get_smoke(arch)
+    B, S = 2, 32
+    params = tf.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, rng, B, S)
+    loss_fn = api.make_forward_loss(cfg)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True)
+    )(params, batch)
+    assert np.isfinite(float(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        assert np.all(np.isfinite(np.asarray(g, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_shapes(rng, arch):
+    cfg = get_smoke(arch)
+    B, S = 2, 16
+    params = tf.init_params(cfg, jax.random.key(1))
+    batch = _batch(cfg, rng, B, S)
+    hidden, _, _ = tf.forward(cfg, params, batch["tokens"],
+                              patch_embeds=batch.get("patch_embeds"),
+                              enc_frames=batch.get("enc_frames"))
+    assert hidden.shape == (B, S, cfg.d_model)
+    logits = tf.logits_fn(cfg, params, hidden)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_decode(rng, arch):
+    cfg = get_smoke(arch)
+    B = 2
+    params = tf.init_params(cfg, jax.random.key(2))
+    caches = tf.init_caches(cfg, B, 24)
+    enc_out = None
+    if cfg.encoder is not None:
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder.n_frames, cfg.d_model)), jnp.float32)
+        enc_out = tf.encode(cfg, params, frames)
+    tok = jnp.ones((B, 1), jnp.int32)
+    step = jax.jit(api.make_serve_step(cfg))
+    for p in range(3):
+        if enc_out is not None:
+            logits, caches = step(params, tok, jnp.asarray(p, jnp.int32), caches, enc_out)
+        else:
+            logits, caches = step(params, tok, jnp.asarray(p, jnp.int32), caches)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_prefill_decode_consistency(rng):
+    """Greedy decode after prefill matches teacher-forced forward argmax."""
+    cfg = get_smoke("tinyllama-1.1b")
+    params = tf.init_params(cfg, jax.random.key(3))
+    B, S0 = 1, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S0)), jnp.int32)
+    # teacher-forced logits at the last position
+    hidden, _, _ = tf.forward(cfg, params, toks)
+    lg_full = tf.logits_fn(cfg, params, hidden)[:, -1]
+    # prefill path
+    prefill = api.make_prefill(cfg)
+    lg_pre, _ = prefill(params, {"tokens": toks})
+    np.testing.assert_allclose(
+        np.asarray(lg_full), np.asarray(lg_pre[:, 0]), rtol=2e-4, atol=2e-4
+    )
+    # decode path: feed tokens one by one through the cache
+    caches = tf.init_caches(cfg, B, S0 + 4)
+    step = api.make_serve_step(cfg)
+    for p in range(S0):
+        lg_dec, caches = step(params, toks[:, p : p + 1], jnp.asarray(p, jnp.int32), caches)
+    np.testing.assert_allclose(
+        np.asarray(lg_full), np.asarray(lg_dec[:, 0]), rtol=3e-3, atol=3e-3
+    )
+
+
+def test_chunked_attention_matches_full(rng):
+    from repro.models import attention as attn
+
+    B, S, H, Kv, Dh = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Kv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Kv, Dh)), jnp.float32)
+    full = attn.full_attention(q, k, v, n_kv=Kv, causal=True)
+    for schedule in ("tri", "scan"):
+        ch = attn.chunked_attention(
+            q, k, v, n_kv=Kv, causal=True, q_chunk=16, kv_chunk=16,
+            schedule=schedule,
+        )
+        np.testing.assert_allclose(
+            np.asarray(full), np.asarray(ch), rtol=2e-4, atol=2e-4
+        )
+    # sliding window agreement
+    full_w = attn.full_attention(q, k, v, n_kv=Kv, causal=True, window=24)
+    for schedule in ("tri", "scan"):
+        ch_w = attn.chunked_attention(
+            q, k, v, n_kv=Kv, causal=True, window=24, q_chunk=16, kv_chunk=16,
+            schedule=schedule,
+        )
+        np.testing.assert_allclose(
+            np.asarray(full_w), np.asarray(ch_w), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_long_500k_support_flags():
+    from repro.configs import get_shape
+    long = get_shape("long_500k")
+    expected_runs = {"mamba2-2.7b", "mixtral-8x22b", "recurrentgemma-9b"}
+    runs = {a for a in ARCHS if api.supports_shape(get_config(a), long)[0]}
+    assert runs == expected_runs
+
+
+def test_full_configs_validate():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        cfg.validate()
+        # exact published numbers spot-check
+        if arch == "kimi-k2-1t-a32b":
+            assert cfg.moe.n_experts == 384 and cfg.moe.top_k == 8
+            assert cfg.d_model == 7168 and cfg.n_layers == 61
+        if arch == "nemotron-4-340b":
+            assert cfg.d_model == 18432 and cfg.d_ff == 73728

@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SimComm, caqr_factorize, ft_tsqr, householder_qr, q_dense
+from repro.core import recovery as rec
+from repro.data.pipeline import DataConfig, make_batch
+
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**_SETTINGS)
+@given(
+    m_pow=st.integers(3, 6),
+    n_pow=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_qr_gram_invariant(m_pow, n_pow, seed, scale):
+    """R^T R == A^T A for any well-formed input, across magnitudes."""
+    m, n = 2**m_pow, 2**n_pow
+    if n > m:
+        n = m
+    A = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m, n)) * scale, jnp.float32
+    )
+    wy = householder_qr(A)
+    G = np.asarray(A).T @ np.asarray(A)
+    R = np.asarray(wy.R)
+    tol = 5e-5 * max(np.abs(G).max(), 1e-30)
+    assert np.abs(R.T @ R - G).max() <= tol * 64
+
+
+@settings(**_SETTINGS)
+@given(m_pow=st.integers(3, 5), n_pow=st.integers(1, 3), seed=st.integers(0, 2**16))
+def test_q_orthogonality_invariant(m_pow, n_pow, seed):
+    m, n = 2**m_pow, 2**n_pow
+    A = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m, n)), jnp.float32
+    )
+    wy = householder_qr(A)
+    Q = np.asarray(q_dense(wy.Y, wy.T))
+    assert np.abs(Q.T @ Q - np.eye(m)).max() < 1e-4
+
+
+@settings(**_SETTINGS)
+@given(
+    p_pow=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_ft_tsqr_replication_invariant(p_pow, seed):
+    """Paper §III-B: after the butterfly, EVERY lane holds the identical R —
+    for any power-of-two lane count."""
+    P = 2**p_pow
+    comm = SimComm(P)
+    A = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((P, 16, 8)), jnp.float32
+    )
+    fac = ft_tsqr(A, comm)
+    R = np.asarray(fac.R)
+    assert np.all(R == R[0])
+
+
+@settings(**_SETTINGS)
+@given(
+    failed=st.integers(0, 7),
+    level=st.integers(0, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_recovery_invariant(failed, level, seed):
+    """Any (lane, level) failure recovers exactly from one source."""
+    P = 8
+    comm = SimComm(P)
+    g = np.random.default_rng(seed)
+    A = jnp.asarray(g.standard_normal((P, 16, 4)), jnp.float32)
+    C = jnp.asarray(g.standard_normal((P, 16, 8)), jnp.float32)
+    fac = ft_tsqr(A, comm)
+    clean = rec.run_ft_trailing(C, fac, comm)
+    faulty = rec.run_ft_trailing(
+        C, fac, comm, fail_at_level=level, failed_lane=failed, A_stacked=C
+    )
+    assert np.array_equal(np.asarray(clean), np.asarray(faulty))
+
+
+@settings(**_SETTINGS)
+@given(step=st.integers(0, 1000), seed=st.integers(0, 2**10))
+def test_data_determinism_invariant(step, seed):
+    """batch(seed, step) is a pure function — the property checkpoint/replay
+    correctness rests on."""
+    cfg = DataConfig(vocab=128, seq_len=32, global_batch=4, seed=seed)
+    b1 = make_batch(cfg, step)
+    b2 = make_batch(cfg, step)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["labels"], b2["labels"])
+    # shifted-by-one label structure
+    full1 = np.concatenate([b1["tokens"], b1["labels"][:, -1:]], axis=1)
+    assert np.array_equal(full1[:, 1:], b1["labels"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_pow=st.integers(2, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_caqr_r_sign_canonical_invariant(n_pow, seed):
+    """|diag| of CAQR's R matches LAPACK's for random matrices."""
+    P, m_loc, b = 4, 16, 4
+    n = 4 * 2**n_pow
+    comm = SimComm(P)
+    A = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((P, m_loc, n)), jnp.float32
+    )
+    res = caqr_factorize(A, comm, b)
+    Rr = np.linalg.qr(np.asarray(A).reshape(-1, n), mode="r")
+    d1 = np.abs(np.diag(np.asarray(res.R[0])))
+    d2 = np.abs(np.diag(Rr))
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)

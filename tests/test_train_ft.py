@@ -1,0 +1,150 @@
+"""Training loop + fault-tolerance integration tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import diskless, save
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig, Pipeline, make_batch
+from repro.ft.failures import FailureSchedule
+from repro.ft.semantics import Semantics
+from repro.train import TrainConfig, Trainer
+
+
+@pytest.fixture(scope="module")
+def dcfg():
+    cfg = get_smoke("tinyllama-1.1b")
+    return DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=1)
+
+
+def test_loss_decreases(dcfg):
+    cfg = get_smoke("tinyllama-1.1b")
+    tcfg = TrainConfig(steps=25, lr=1e-2, warmup=5, n_lanes=4, log_every=100)
+    tr = Trainer(cfg, tcfg, dcfg)
+    hist = tr.run()
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.8
+
+
+def test_rebuild_is_bit_identical(dcfg):
+    cfg = get_smoke("tinyllama-1.1b")
+    tcfg = TrainConfig(steps=20, lr=1e-2, warmup=5, n_lanes=4,
+                       diskless_every=5, log_every=100,
+                       semantics=Semantics.REBUILD)
+    ref = Trainer(cfg, tcfg, dcfg)
+    ref.run()
+    failed = Trainer(cfg, tcfg, dcfg)
+    failed.run(FailureSchedule(events={13: [2]}))
+    for a, b in zip(jax.tree_util.tree_leaves(ref.state.params),
+                    jax.tree_util.tree_leaves(failed.state.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shrink_continues(dcfg):
+    cfg = get_smoke("tinyllama-1.1b")
+    tcfg = TrainConfig(steps=15, lr=1e-2, warmup=3, n_lanes=4, log_every=100,
+                       semantics=Semantics.SHRINK)
+    tr = Trainer(cfg, tcfg, dcfg)
+    hist = tr.run(FailureSchedule(events={7: [1]}))
+    assert hist[-1]["lanes"] == 3
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_blank_continues(dcfg):
+    cfg = get_smoke("tinyllama-1.1b")
+    tcfg = TrainConfig(steps=12, lr=1e-2, warmup=3, n_lanes=4, log_every=100,
+                       semantics=Semantics.BLANK)
+    tr = Trainer(cfg, tcfg, dcfg)
+    hist = tr.run(FailureSchedule(events={6: [0]}))
+    assert hist[-1]["lanes"] == 3
+
+
+def test_abort_raises(dcfg):
+    cfg = get_smoke("tinyllama-1.1b")
+    tcfg = TrainConfig(steps=10, n_lanes=4, log_every=100,
+                       semantics=Semantics.ABORT)
+    tr = Trainer(cfg, tcfg, dcfg)
+    with pytest.raises(RuntimeError):
+        tr.run(FailureSchedule(events={3: [1]}))
+
+
+def test_disk_checkpoint_roundtrip(tmp_path, dcfg):
+    cfg = get_smoke("tinyllama-1.1b")
+    tcfg = TrainConfig(steps=6, n_lanes=2, log_every=100)
+    tr = Trainer(cfg, tcfg, dcfg)
+    tr.run()
+    tag = save.save(str(tmp_path), 6, tr.state.params, tr.state.opt_state)
+    assert save.latest_step(str(tmp_path)) == 6
+    p2, o2, manifest = save.restore(str(tmp_path), tr.state.params, tr.state.opt_state)
+    for a, b in zip(jax.tree_util.tree_leaves(tr.state.params),
+                    jax.tree_util.tree_leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_parity_store_recovers(rng):
+    st = diskless.ParityStore(8, group=4)
+    states = [{"w": rng.standard_normal((16, 16)).astype(np.float32),
+               "b": rng.standard_normal((16,)).astype(np.float32)}
+              for _ in range(8)]
+    st.push_group(states)
+    for failed in (0, 3, 5):
+        got = st.recover(failed)
+        assert np.array_equal(got["w"], states[failed]["w"])
+        assert np.array_equal(got["b"], states[failed]["b"])
+
+
+def test_buddy_store_single_source(rng):
+    st = diskless.BuddyStore(4)
+    states = [{"x": np.full((4,), i, np.float32)} for i in range(4)]
+    for lane, s in enumerate(states):
+        st.push(lane, s)
+    for failed in range(4):
+        got = st.recover(failed)
+        assert np.array_equal(got["x"], states[failed]["x"])
+
+
+def test_pipeline_prefetch_and_resume(dcfg):
+    p = Pipeline(dcfg, start_step=3, prefetch=2)
+    step, batch = next(p)
+    assert step == 3
+    ref = make_batch(dcfg, 3, lo=0, hi=dcfg.global_batch)
+    assert np.array_equal(batch["tokens"], ref["tokens"])
+    step2, _ = next(p)
+    assert step2 == 4
+    p.close()
+
+
+def test_powersgd_compresses_and_converges(rng):
+    """Error-feedback PowerSGD-QR: compressed gradient converges to the true
+    mean over iterations on a fixed problem."""
+    from repro.optim import powersgd
+
+    m, n, r = 64, 32, 4
+    G = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    omega = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
+    err = jnp.zeros((m, n), jnp.float32)
+    applied = jnp.zeros((m, n), jnp.float32)
+    T = 30
+    for _ in range(T):
+        G_hat, err, omega = powersgd.compress_reduce(G, omega, err, axis_name=None)
+        applied = applied + G_hat
+    # the error-feedback guarantee: sum of applied updates = T*G - err_T,
+    # so the mean applied gradient converges to the true gradient
+    mean_applied = np.asarray(applied) / T
+    rel = np.linalg.norm(mean_applied - np.asarray(G)) / np.linalg.norm(np.asarray(G))
+    assert rel < 0.2, rel
+    # exact identity: applied + err == T * G
+    np.testing.assert_allclose(
+        np.asarray(applied + err), T * np.asarray(G), rtol=1e-3, atol=1e-2
+    )
+
+
+def test_caqr_muon_orthogonalizes(rng):
+    from repro.optim.caqr_muon import _orth
+
+    M = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    O = np.asarray(_orth(M))
+    np.testing.assert_allclose(O.T @ O, np.eye(16), atol=1e-4)
+    Mw = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    Ow = np.asarray(_orth(Mw))
+    np.testing.assert_allclose(Ow @ Ow.T, np.eye(16), atol=1e-4)
