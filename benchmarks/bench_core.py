@@ -162,4 +162,81 @@ def bench_kernels() -> List[Dict]:
     return rows
 
 
+def _trailing_flops_per_lane(m_loc: int, b: int, n_cols: int, levels: int) -> float:
+    """Per-lane trailing-update flops for one panel over ``n_cols`` columns:
+    leaf WY apply (two GEMMs + rank-b update) + per-level W-form combines."""
+    leaf = 4.0 * m_loc * b * n_cols + 2.0 * b * b * n_cols
+    combines = levels * 6.0 * b * b * n_cols
+    return leaf + combines
+
+
+def bench_sweep_cost(quick: bool = False) -> Dict:
+    """Tentpole claim: the windowed right-looking sweep does only live work.
+
+    The seed sweep's trailing update spans all n columns at every panel —
+    constant cost per panel, ~2x the trailing flops of a square
+    factorization. The windowed sweep restricts panel k to ``A[:, k*b:]``,
+    so its per-panel cost *decreases with k* while producing bit-identical
+    results. Returns a machine-readable record (per-panel flops + measured
+    us, sweep totals) for BENCH_core.json.
+    """
+    from repro.core.caqr import _panel_step, _panel_step_windowed
+
+    P, m_loc, n, b = (4, 32, 128, 16) if quick else (8, 64, 512, 32)
+    comm = SimComm(P)
+    levels = P.bit_length() - 1
+    n_panels = n // b
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+
+    # per-panel cost: measured us + analytic per-lane trailing flops
+    ks = sorted({0, n_panels // 2, n_panels - 1})
+    per_panel = []
+    full_body = _panel_step(comm, b, False)
+    for k in ks:
+        win_body = _panel_step_windowed(comm, b, False, k, n)
+        us_win = _time(jax.jit(lambda a: win_body(a)[0]), A, iters=3)
+        us_full = _time(
+            jax.jit(lambda a, kk: full_body(a, kk)[0]), A, jnp.asarray(k), iters=3
+        )
+        per_panel.append({
+            "k": k,
+            "us_windowed": us_win,
+            "us_full": us_full,
+            "flops_windowed": _trailing_flops_per_lane(m_loc, b, n - k * b, levels),
+            "flops_full": _trailing_flops_per_lane(m_loc, b, n, levels),
+        })
+
+    # whole-sweep wall time: windowed vs full-width unrolled vs scan
+    t_win = _time(
+        jax.jit(lambda a: caqr_factorize(a, comm, b, use_scan=False).R), A, iters=3
+    )
+    t_full = _time(
+        jax.jit(lambda a: caqr_factorize(a, comm, b, use_scan=False,
+                                         windowed=False).R), A, iters=3
+    )
+    t_scan = _time(
+        jax.jit(lambda a: caqr_factorize(a, comm, b, use_scan=True).R), A, iters=3
+    )
+    f_win = sum(
+        _trailing_flops_per_lane(m_loc, b, n - k * b, levels)
+        for k in range(n_panels)
+    )
+    f_full = n_panels * _trailing_flops_per_lane(m_loc, b, n, levels)
+    return {
+        "config": {"P": P, "m_loc": m_loc, "n": n, "b": b,
+                   "n_panels": n_panels, "quick": quick},
+        "per_panel": per_panel,
+        "totals": {
+            "us_windowed_sweep": t_win,
+            "us_full_sweep": t_full,
+            "us_scan_sweep": t_scan,
+            "trailing_flops_windowed": f_win,
+            "trailing_flops_full": f_full,
+            "trailing_flop_ratio": f_full / f_win,
+        },
+    }
+
+
 ALL = [bench_tsqr, bench_trailing, bench_recovery, bench_caqr, bench_kernels]
+QUICK = [bench_kernels]

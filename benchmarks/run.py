@@ -1,27 +1,62 @@
 """Benchmark harness: one function per paper claim. Prints
-``name,us_per_call,derived`` CSV, then the roofline table if dry-run
+``name,us_per_call,derived`` CSV plus the sweep-cost table, writes the
+machine-readable ``BENCH_core.json`` at the repo root (the perf trajectory
+artifact — one snapshot per PR), then the roofline table if dry-run
 artifacts exist.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
+  --quick: kernel smoke + reduced sweep-cost only (CI smoke; still writes
+           BENCH_core.json, flagged quick=true).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
+
+_DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_core.json")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(_DEFAULT_OUT))
+    args = ap.parse_args()
+
     from benchmarks import bench_core, roofline
 
+    rows = []
     print("name,us_per_call,derived")
-    for bench in bench_core.ALL:
+    for bench in (bench_core.QUICK if args.quick else bench_core.ALL):
         for row in bench():
+            rows.append(row)
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
 
-    rows = roofline.load_all()
-    if rows:
-        print()
-        print("# roofline (from dry-run artifacts; see EXPERIMENTS.md)")
-        roofline.main()
+    sweep = bench_core.bench_sweep_cost(quick=args.quick)
+    print()
+    print("# sweep cost per panel (windowed vs full-width trailing update)")
+    print("k,us_windowed,us_full,flops_windowed,flops_full")
+    for p in sweep["per_panel"]:
+        print(f"{p['k']},{p['us_windowed']:.1f},{p['us_full']:.1f},"
+              f"{p['flops_windowed']:.3e},{p['flops_full']:.3e}")
+    t = sweep["totals"]
+    print(f"# sweep totals: windowed {t['us_windowed_sweep']:.0f}us, "
+          f"full {t['us_full_sweep']:.0f}us, scan {t['us_scan_sweep']:.0f}us, "
+          f"trailing-flop ratio {t['trailing_flop_ratio']:.2f}x")
+
+    record = {"schema": 1, "quick": args.quick, "rows": rows,
+              "sweep_cost": sweep}
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"# wrote {args.out}")
+
+    if not args.quick:
+        rl = roofline.load_all()
+        if rl:
+            print()
+            print("# roofline (from dry-run artifacts; see EXPERIMENTS.md)")
+            roofline.main()
 
 
 if __name__ == "__main__":

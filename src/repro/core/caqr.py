@@ -53,6 +53,94 @@ class CAQRResult(NamedTuple):
     bundles: Optional[RecoveryBundle]  # stacked over panels, if requested
 
 
+def _panel_step_windowed(comm, b: int, collect_bundles: bool, k: int, n: int):
+    """One panel of the *windowed* right-looking sweep (static ``k``).
+
+    The trailing update (leaf WY apply, per-level combines, writeback) is
+    restricted to the live window ``A[:, k*b:]`` — the panel's own columns
+    ride along because their C' rows ARE the R_kk deposit and the recovery
+    bundle must cover them; the ``k*b`` already-factored columns to the left
+    are dead (their R rows were extracted at their own panel step; what is
+    left below the frontier is annihilated garbage) and are not touched.
+    Per-column arithmetic is unchanged, so R and the live-window slice of
+    every recovery bundle are bit-identical to the full-width sweep; R rows
+    and bundles are zero-padded back to width ``n`` so the per-panel outputs
+    stack (dead columns need no recovery — their bundle slots are zero).
+
+    Fully-consumed lanes additionally skip their (identity) leaf apply via
+    ``skip_consumed`` — the frozen-row skip.
+    """
+    P = comm.axis_size()
+    idx = comm.axis_index()
+    col0 = k * b
+
+    def body(A_cur):
+        m_loc, _n = comm.local_shape(A_cur)
+        assert _n == n
+        t_lane = col0 // m_loc  # static: owner of this panel's diagonal rows
+        row_start_raw = col0 - idx * m_loc
+        active = row_start_raw < m_loc
+        row_start = jnp.clip(row_start_raw, 0, m_loc - b)
+
+        window = comm.map_local(lambda A: A[:, col0:])(A_cur)
+        panel = comm.map_local(lambda W: W[:, :b])(window)
+
+        wy = comm.map_local(householder_qr_masked)(panel, row_start)
+        leaf_Y = comm.where(active, wy.Y, jnp.zeros_like(wy.Y))
+        leaf_T = comm.where(active, wy.T, jnp.zeros_like(wy.T))
+        R_leaf = comm.where(active, wy.R, jnp.zeros_like(wy.R))
+
+        level_Y2, level_T, _Rtree = ft_tsqr_combine(
+            comm, R_leaf, t_lane, active_threshold=t_lane
+        )
+        factors = DistTSQRFactors(leaf_Y, leaf_T, level_Y2, level_T, R_leaf)
+
+        win_next, bundle, C_final = trailing_update_ft(
+            window, factors, comm, target=t_lane, row_start=row_start,
+            active=active, dead_threshold=t_lane, skip_consumed=True,
+        )
+        A_next = comm.map_local(
+            lambda A, W: jnp.concatenate([A[:, :col0], W], axis=1)
+        )(A_cur, win_next)
+
+        R_rows = comm.psum(
+            comm.where(idx == t_lane, C_final, jnp.zeros_like(C_final))
+        )
+        R_rows = comm.map_local(
+            lambda r: jnp.pad(r, ((0, 0), (col0, 0)))
+        )(R_rows)
+        if collect_bundles:
+            bundle = RecoveryBundle(
+                W=_pad_cols(bundle.W, col0),
+                C_self=_pad_cols(bundle.C_self, col0),
+                C_buddy=_pad_cols(bundle.C_buddy, col0),
+                Y2=bundle.Y2, T=bundle.T, self_was_top=bundle.self_was_top,
+            )
+
+        panel_factors = PanelFactors(
+            leaf_Y=leaf_Y,
+            leaf_T=leaf_T,
+            level_Y2=level_Y2,
+            level_T=level_T,
+            row_start=row_start,
+            active=active,
+            target=jnp.broadcast_to(t_lane, jnp.shape(idx)),
+        )
+        out = (panel_factors, R_rows, bundle if collect_bundles else None)
+        return A_next, out
+
+    return body
+
+
+def _pad_cols(x: jax.Array, left: int) -> jax.Array:
+    """Left-pad the trailing (column) axis with zeros — realigns a windowed
+    array with full-width column indices."""
+    if left == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(left, 0)]
+    return jnp.pad(x, pad)
+
+
 def _panel_step(comm, b: int, collect_bundles: bool):
     """Returns the scan body for one panel of the sweep."""
     P = comm.axis_size()
@@ -111,28 +199,47 @@ def caqr_factorize(
     panel_width: int,
     collect_bundles: bool = False,
     use_scan: bool = True,
+    windowed: Optional[bool] = None,
 ) -> CAQRResult:
     """FT-CAQR sweep. Returns replicated R plus implicit-Q panel factors.
 
     A_local: (m_loc, n) per lane (SimComm: (P, m_loc, n)).
     panel_width: b; requires m_loc % b == 0, n % b == 0, n <= P*m_loc.
+    use_scan: True = lax.scan over panels (uniform per-iteration shapes,
+        compile-time friendly; the trailing update spans all n columns every
+        panel). False = statically unrolled sweep — the performance variant.
+    windowed: restrict panel k's trailing update to the live window
+        ``A[:, k*b:]`` with *static* column slices, halving the sweep's
+        trailing flops (see ``_panel_step_windowed``; outputs bit-identical
+        to the full-width sweep). Requires the unrolled path; defaults to
+        ``not use_scan``.
     """
     b = panel_width
     m_loc, n = comm.local_shape(A_local)
     P = comm.axis_size()
     assert m_loc % b == 0 and n % b == 0, (m_loc, n, b)
     assert n <= P * m_loc, "matrix must have at least as many rows as columns"
+    if windowed is None:
+        windowed = not use_scan
+    assert not (windowed and use_scan), \
+        "the windowed sweep needs static column slices (use_scan=False)"
     n_panels = n // b
-    body = _panel_step(comm, b, collect_bundles)
 
     ks = jnp.arange(n_panels)
     if use_scan:
+        body = _panel_step(comm, b, collect_bundles)
         _, (factors, R_rows, bundles) = jax.lax.scan(body, A_local, ks)
     else:
         outs = []
         A_cur = A_local
+        body = None if windowed else _panel_step(comm, b, collect_bundles)
         for k in range(n_panels):
-            A_cur, out = body(A_cur, jnp.asarray(k))
+            if windowed:
+                A_cur, out = _panel_step_windowed(
+                    comm, b, collect_bundles, k, n
+                )(A_cur)
+            else:
+                A_cur, out = body(A_cur, jnp.asarray(k))
             outs.append(out)
         factors = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
         R_rows = jnp.stack([o[1] for o in outs])

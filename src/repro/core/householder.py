@@ -9,6 +9,19 @@ Everything here is pure JAX, jit-able, and uses *masked* column loops instead
 of dynamic slicing so the same code path serves as the oracle for the Pallas
 kernels (``repro.kernels.ref`` re-exports these) and runs unmodified inside
 ``shard_map``.
+
+Dispatch seam: the public entry points (``householder_qr_masked``,
+``stacked_qr``, ``apply_qt``, ``stacked_apply_qt``) route through the fused
+Pallas kernels in ``repro.kernels.ops`` when the backend policy says so (TPU
+by default; see ``repro.kernels.backend``) and the call is a 2-D f32 one
+the kernels cover. Note the 2-D test sees *per-call* rank: under ``vmap``
+(SimComm's ``map_local``) per-lane tracers are 2-D, so vmapped call sites
+dispatch too and batch through ``pallas_call``'s batching rule (exercised
+by the forced-kernel SimComm sweep test). Explicitly batched arrays with a
+leading lane axis (e.g. the SimComm trailing ``_combine``), other dtypes,
+and explicit ``num_cols`` take the pure-jnp implementations below, which
+are also the oracles the kernels are validated against (``ref.py`` binds
+the ``_``-prefixed pure forms directly, never the dispatchers).
 """
 from __future__ import annotations
 
@@ -17,6 +30,19 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def _kernel_dispatch(*arrays) -> bool:
+    """Route to repro.kernels.ops? (trace-time decision; lazy import keeps
+    core importable without the kernels package and avoids the ops->ref->
+    householder import cycle). The rank test is per call: vmapped per-lane
+    tracers are 2-D and dispatch; only explicitly lane-stacked arrays are
+    filtered out (see module docstring)."""
+    if not all(a.ndim == 2 and a.dtype == jnp.float32 for a in arrays):
+        return False
+    from repro.kernels import backend
+
+    return backend.dispatch_enabled()
 
 
 class WY(NamedTuple):
@@ -54,8 +80,21 @@ def _house(x: jax.Array, pivot: jax.Array, mask: jax.Array) -> Tuple[jax.Array, 
     return v.astype(x.dtype), tau.astype(x.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("num_cols",))
 def householder_qr_masked(
+    A: jax.Array, row_start: jax.Array, num_cols: int | None = None
+) -> WY:
+    """Blocked Householder QR of the active rows of ``A`` (kernel-dispatched;
+    see module docstring). ``num_cols`` forces the pure path."""
+    if num_cols is None and _kernel_dispatch(A):
+        from repro.kernels import ops
+
+        Y, T, R = ops.panel_qr(A, row_start)
+        return WY(Y=Y, T=T, R=R)
+    return _householder_qr_masked(A, row_start, num_cols)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols",))
+def _householder_qr_masked(
     A: jax.Array, row_start: jax.Array, num_cols: int | None = None
 ) -> WY:
     """Blocked Householder QR of the active rows of ``A``.
@@ -109,6 +148,11 @@ def householder_qr(A: jax.Array) -> WY:
     return householder_qr_masked(A, jnp.asarray(0, jnp.int32))
 
 
+def _householder_qr(A: jax.Array) -> WY:
+    """Pure-jnp QR (no kernel dispatch) — the oracle form."""
+    return _householder_qr_masked(A, jnp.asarray(0, jnp.int32))
+
+
 @jax.jit
 def build_t(Y: jax.Array, taus: jax.Array) -> jax.Array:
     """Forward T recurrence: T[:j,j] = -tau_j T[:j,:j] (Y[:,:j]^T y_j).
@@ -131,9 +175,17 @@ def build_t(Y: jax.Array, taus: jax.Array) -> jax.Array:
     return jax.lax.fori_loop(0, n, body, T0)
 
 
-@jax.jit
 def apply_qt(Y: jax.Array, T: jax.Array, C: jax.Array) -> jax.Array:
-    """Q^T C = C - Y (T^T (Y^T C))  for Q = I - Y T Y^T."""
+    """Q^T C = C - Y (T^T (Y^T C))  for Q = I - Y T Y^T (kernel-dispatched)."""
+    if _kernel_dispatch(Y, T, C):
+        from repro.kernels import ops
+
+        return ops.wy_apply(Y, T, C)
+    return _apply_qt(Y, T, C)
+
+
+@jax.jit
+def _apply_qt(Y: jax.Array, T: jax.Array, C: jax.Array) -> jax.Array:
     W = T.T @ (Y.T @ C)
     return C - Y @ W
 
@@ -165,23 +217,32 @@ class StackedQR(NamedTuple):
     R: jax.Array  # (b, b) upper triangular
 
 
-@jax.jit
 def stacked_qr(R_top: jax.Array, R_bot: jax.Array) -> StackedQR:
     """QR of [R_top; R_bot] exploiting the triangular structure.
 
     This is the TSQR tree-combine operation. Both inputs are b x b upper
-    triangular. The generic masked Householder loop preserves the structure
-    (Y's top block is exactly I, bottom block upper triangular); we run it on
-    the stacked 2b x b matrix and slice the structured parts out.
+    triangular. Kernel-dispatched (LAPACK ``tpqrt`` analogue kernel); the
+    pure path runs the generic masked Householder loop on the stacked
+    2b x b matrix — it preserves the structure (Y's top block is exactly I,
+    bottom block upper triangular) — and slices the structured parts out.
     """
+    if _kernel_dispatch(R_top, R_bot):
+        from repro.kernels import ops
+
+        Y2, T, R = ops.stacked_qr(R_top, R_bot)
+        return StackedQR(Y2=Y2, T=T, R=R)
+    return _stacked_qr(R_top, R_bot)
+
+
+@jax.jit
+def _stacked_qr(R_top: jax.Array, R_bot: jax.Array) -> StackedQR:
     b = R_top.shape[0]
     S = jnp.concatenate([jnp.triu(R_top), jnp.triu(R_bot)], axis=0)  # (2b, b)
-    wy = householder_qr_masked(S, jnp.asarray(0, jnp.int32))
+    wy = _householder_qr_masked(S, jnp.asarray(0, jnp.int32))
     Y2 = jnp.triu(wy.Y[b:, :])
     return StackedQR(Y2=Y2, T=wy.T, R=wy.R)
 
 
-@jax.jit
 def stacked_apply_qt(
     sq: StackedQR, C_top: jax.Array, C_bot: jax.Array
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -192,7 +253,19 @@ def stacked_apply_qt(
     C_bot_hat = C_bot - Y2 W       (paper: \\hat C'_1 = C'_1 - Y_1 W)
 
     Returns (C_top_hat, C_bot_hat, W); W is part of the recovery bundle.
+    Kernel-dispatched to the fused trailing-combine kernel.
     """
+    if _kernel_dispatch(sq.Y2, sq.T, C_top, C_bot):
+        from repro.kernels import ops
+
+        return ops.stacked_apply(sq.Y2, sq.T, C_top, C_bot)
+    return _stacked_apply_qt(sq, C_top, C_bot)
+
+
+@jax.jit
+def _stacked_apply_qt(
+    sq: StackedQR, C_top: jax.Array, C_bot: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     W = sq.T.T @ (C_top + sq.Y2.T @ C_bot)
     return C_top - W, C_bot - sq.Y2 @ W, W
 

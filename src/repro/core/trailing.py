@@ -35,6 +35,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.comm import SimComm
 from repro.core.householder import apply_qt
 from repro.core.tsqr import DistTSQRFactors, _levels, _xor_perm
 
@@ -58,13 +59,30 @@ class RecoveryBundle(NamedTuple):
 
 
 def _combine(Y2, T, C_top, C_bot):
-    """Paper's W-form combine (batched under SimComm via .mT / matmul)."""
+    """Paper's W-form combine (batched under SimComm via .mT / matmul).
+
+    Unbatched f32 calls (the AxisComm/shard_map production path) dispatch to
+    the fused trailing-combine Pallas kernel via ``stacked_apply_qt``.
+    """
+    if Y2.ndim == 2:
+        from repro.core.householder import StackedQR, stacked_apply_qt
+
+        return stacked_apply_qt(StackedQR(Y2=Y2, T=T, R=T), C_top, C_bot)
     W = T.mT @ (C_top + Y2.mT @ C_bot)
     return C_top - W, C_bot - Y2 @ W, W
 
 
-def _leaf_apply(comm, factors: DistTSQRFactors, C_local, row_start):
-    """Local Q^T apply + extract the C' block at each lane's row_start."""
+def _leaf_apply(comm, factors: DistTSQRFactors, C_local, row_start,
+                active=None, skip_consumed: bool = False):
+    """Local Q^T apply + extract the C' block at each lane's row_start.
+
+    ``skip_consumed``: lanes with ``active == False`` are fully consumed by
+    the sweep — their leaf Y is all zeros and the apply is the identity.
+    Under ``lax.cond`` the SPMD (shard_map) execution skips the dead lanes'
+    leaf GEMMs at runtime; the branch outputs are bit-identical to running
+    the zero-Y apply, so results do not depend on the flag. (SimComm's vmap
+    lowers the cond to a select and computes both — it is a simulator.)
+    """
     b = comm.local_shape(factors.R)[-1]
 
     def leaf(Y, T, C, rs):
@@ -72,7 +90,24 @@ def _leaf_apply(comm, factors: DistTSQRFactors, C_local, row_start):
         Cp = jax.lax.dynamic_slice_in_dim(C2, rs, b, axis=0)
         return C2, Cp
 
-    return comm.map_local(leaf)(factors.leaf_Y, factors.leaf_T, C_local, row_start)
+    # SimComm's vmap would lower the cond to a select computing BOTH
+    # branches — strictly more work in the simulator, identical results —
+    # so the skip only engages on real SPMD comms.
+    if not skip_consumed or active is None or isinstance(comm, SimComm):
+        return comm.map_local(leaf)(
+            factors.leaf_Y, factors.leaf_T, C_local, row_start
+        )
+
+    def leaf_or_skip(Y, T, C, rs, act):
+        return jax.lax.cond(
+            act,
+            lambda: leaf(Y, T, C, rs),
+            lambda: (C, jax.lax.dynamic_slice_in_dim(C, rs, b, axis=0)),
+        )
+
+    return comm.map_local(leaf_or_skip)(
+        factors.leaf_Y, factors.leaf_T, C_local, row_start, active
+    )
 
 
 def _writeback(comm, C_local, C_prime, row_start, active):
@@ -93,6 +128,7 @@ def trailing_update_ft(
     active=None,
     dead_threshold=None,
     paper_semantics: bool = False,
+    skip_consumed: bool = False,
 ):
     """Algorithm 2: fault-tolerant trailing update.
 
@@ -117,6 +153,9 @@ def trailing_update_ft(
         bundle for *every* level (strictly more redundancy) and replicated
         tree state — this is the variant the CAQR sweep uses. Both are
         valid orthogonal reductions.
+    skip_consumed: skip the leaf apply on inactive lanes via ``lax.cond``
+        (see ``_leaf_apply``); bit-identical outputs, fewer flops under
+        SPMD. The windowed CAQR sweep sets this.
 
     Returns (updated block-row, per-level recovery bundles, final C').
     """
@@ -133,7 +172,10 @@ def trailing_update_ft(
     if dead_threshold is None:
         dead_threshold = jnp.zeros((), jnp.int32)
 
-    C_local, C_prime = _leaf_apply(comm, factors, C_local, row_start)
+    C_local, C_prime = _leaf_apply(
+        comm, factors, C_local, row_start,
+        active=active, skip_consumed=skip_consumed,
+    )
     C_prime = comm.where(active, C_prime, jnp.zeros_like(C_prime))
 
     Ws, Cs_self, Cs_buddy, tops = [], [], [], []

@@ -1,0 +1,10 @@
+"""Distributed-execution helpers: logical-axis sharding rules + param/batch
+sharding construction.
+
+``sharding``        - the logical-axis annotation layer (``ax`` + rule tables)
+``params_sharding`` - NamedSharding trees for params / optimizer state /
+                      batches / decode caches (FSDP + batch sharding)
+"""
+from repro.dist import params_sharding, sharding
+
+__all__ = ["params_sharding", "sharding"]

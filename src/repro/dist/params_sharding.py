@@ -1,0 +1,99 @@
+"""NamedSharding trees for parameters, optimizer state, batches and caches.
+
+Parameters/optimizer state use an FSDP layout: each leaf is sharded along
+the largest dim divisible by the FSDP axis size (replicated when nothing
+divides — small norms/scalars). Batches shard their leading (batch) dim.
+Decode caches shard batch and, optionally, the KV sequence dim.
+
+All functions take abstract trees (``ShapeDtypeStruct`` leaves from
+``jax.eval_shape``) and return matching trees of ``NamedSharding``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axes = Union[None, str, Sequence[str]]
+
+
+def _axis_size(mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([dict(mesh.shape)[a] for a in axes]))
+
+
+def _fsdp_spec(shape, mesh, axes: Axes) -> P:
+    """Shard the largest divisible dim over ``axes``; replicate otherwise."""
+    size = _axis_size(mesh, axes)
+    if size == 1 or not shape:
+        return P()
+    order = sorted(range(len(shape)), key=lambda i: shape[i], reverse=True)
+    for i in order:
+        if shape[i] % size == 0 and shape[i] >= size:
+            spec = [None] * len(shape)
+            spec[i] = tuple(axes) if not isinstance(axes, str) else axes
+            return P(*spec)
+    return P()
+
+
+def tree_shardings(tree: Any, mesh, fsdp: Axes) -> Any:
+    """FSDP NamedSharding for every leaf of an abstract tree."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, _fsdp_spec(leaf.shape, mesh, fsdp)),
+        tree,
+    )
+
+
+def _batch_spec(shape, mesh, axes: Axes, dim: int = 0) -> P:
+    size = _axis_size(mesh, axes)
+    if size == 1 or len(shape) <= dim or shape[dim] % size != 0:
+        return P()
+    spec = [None] * len(shape)
+    spec[dim] = tuple(axes) if not isinstance(axes, str) else axes
+    return P(*spec)
+
+
+def batch_shardings(tree: Any, mesh, batch_axes: Axes) -> Any:
+    """Shard the leading (batch) dim of every leaf over ``batch_axes``."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, _batch_spec(leaf.shape, mesh, batch_axes)),
+        tree,
+    )
+
+
+def cache_shardings(caches: Any, mesh, batch_axes: Axes,
+                    kv_seq_axes: Axes = None) -> Any:
+    """Decode-cache shardings.
+
+    Cache leaves come in two layouts (see ``transformer.init_caches``):
+    KV caches ``k``/``v`` of shape (B, S, KV, Dh) and recurrent states
+    ``h``/``conv`` with batch leading. Leaves under the scanned ``groups``
+    subtree carry one extra leading (n_groups) axis. The batch dim shards
+    over ``batch_axes``; the KV sequence dim (dim batch+1 on k/v leaves)
+    over ``kv_seq_axes`` when divisible.
+    """
+    def spec_for(path, leaf) -> NamedSharding:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        offset = 1 if "groups" in keys else 0
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        bsize = _axis_size(mesh, batch_axes)
+        if bsize > 1 and len(shape) > offset and shape[offset] % bsize == 0:
+            spec[offset] = tuple(batch_axes) if not isinstance(batch_axes, str) \
+                else batch_axes
+        is_kv = keys and keys[-1] in ("k", "v")
+        ssize = _axis_size(mesh, kv_seq_axes)
+        if (is_kv and ssize > 1 and len(shape) > offset + 1
+                and shape[offset + 1] % ssize == 0):
+            spec[offset + 1] = tuple(kv_seq_axes) \
+                if not isinstance(kv_seq_axes, str) else kv_seq_axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)

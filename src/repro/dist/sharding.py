@@ -1,0 +1,87 @@
+"""Logical-axis sharding annotations.
+
+Model code never names mesh axes directly: it annotates activations with
+*logical* axis names (``ax(x, "batch", None, "heads", None)``) and a rule
+table maps each logical name to a mesh axis (a string), a tuple of mesh axes
+(e.g. batch over ``("pod", "data")``), or ``None`` (replicated / unsharded).
+
+Outside a ``use_rules`` context ``ax`` is the identity, so the same model
+code runs on a single device (smoke tests) and under ``jax.jit`` on a
+production mesh (dry-run / train) unchanged. Rules are applied via
+``jax.lax.with_sharding_constraint`` against the ambient mesh set with
+``jax.set_mesh``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, Any]) -> Iterator[None]:
+    """Activate a logical-axis -> mesh-axis rule table for the enclosed
+    trace. Must nest inside ``jax.set_mesh(mesh)`` so the constraints bind."""
+    prev = current_rules()
+    _STATE.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def ax(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (one per dim).
+
+    ``None`` entries (and logical names a rule table maps to ``None``) leave
+    the dim unsharded. Identity when no rule table is active.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = P(*(rules.get(name) if name is not None else None
+               for name in logical_axes))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def single_pod_rules() -> Dict[str, Any]:
+    """16x16 (data x model) pod: batch over data, width dims over model."""
+    return {
+        "batch": "data",
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "ssm_heads": "model",
+        "lru": "model",
+        "seq_shard": None,
+        "kv_seq_shard": None,
+    }
+
+
+def multi_pod_rules() -> Dict[str, Any]:
+    """2x16x16 (pod x data x model): batch spans both pod and data."""
+    rules = single_pod_rules()
+    rules["batch"] = ("pod", "data")
+    return rules
+
+
+def long_decode_overrides(rules: Dict[str, Any]) -> Dict[str, Any]:
+    """long_500k decode: the KV/state cache's sequence dim dominates HBM, so
+    it shards over every available axis and the (small) decode batch stays
+    replicated — the inverse of the training layout."""
+    rules = dict(rules)
+    rules["batch"] = None
+    rules["kv_seq_shard"] = ("data", "model")
+    return rules

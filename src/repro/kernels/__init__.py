@@ -4,9 +4,12 @@ panel_qr   - Householder panel factorization (geqrt) in VMEM
 stacked_qr - TSQR tree combine (tpqrt) + fused trailing combine
 wy_apply   - fused compact-WY application C - Y (T^T (Y^T C))
 
-ops.py exposes jit'd wrappers (interpret=True on CPU); ref.py holds the
-pure-jnp oracles every kernel is validated against.
+ops.py is the dispatch seam ``repro.core`` routes through: jit'd wrappers
+that pad up to the kernels' alignment contract and fall back to the
+pure-jnp oracles in ref.py. backend.py holds the policy (when core
+dispatches here at all; interpret=Mosaic on TPU, interpreter elsewhere).
+See DESIGN.md §2.
 """
-from repro.kernels import ops, ref
+from repro.kernels import backend, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["backend", "ops", "ref"]

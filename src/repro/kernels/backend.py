@@ -1,0 +1,84 @@
+"""Backend policy for the Pallas kernels — the single source of truth.
+
+Two independent decisions live here:
+
+* ``interpret_default()`` — HOW a kernel runs when it runs: compiled Mosaic
+  on TPU, ``interpret=True`` (traced-Python-over-VMEM-blocks) everywhere
+  else. Kernel modules take ``interpret=None`` and resolve it here; nothing
+  hardcodes ``interpret=True`` anymore.
+
+* ``dispatch_enabled()`` — WHETHER the core hot path (``repro.core``) routes
+  its panel/combine/apply operations through the kernels at all. Default:
+  only on TPU, where the fused kernels beat XLA's op-by-op lowering. On CPU
+  the interpret-mode kernels are a validation vehicle, not a fast path, so
+  core stays on the pure-jnp implementations unless forced.
+
+Overrides, strongest first:
+  1. ``use_kernels(True/False)`` — programmatic (tests, benchmarks);
+     ``use_kernels(None)`` restores the automatic policy.
+  2. ``REPRO_NO_KERNELS=1``    — kill switch, wins over the backend default.
+  3. ``REPRO_FORCE_KERNELS=1`` — force the core dispatch on (parity tests
+     exercise the padded kernel path on CPU this way).
+
+Note the decisions are read at *trace* time: flipping a flag does not
+invalidate already-jitted callers. Tests flip flags before building jits.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_OVERRIDE: Optional[bool] = None
+
+
+def interpret_default() -> bool:
+    """True everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel's ``interpret=None`` default against the backend."""
+    return interpret_default() if interpret is None else interpret
+
+
+def use_kernels(flag: Optional[bool]) -> None:
+    """Force the core->kernel dispatch on/off; None = automatic policy."""
+    global _OVERRIDE
+    _OVERRIDE = flag
+
+
+def dispatch_enabled() -> bool:
+    """Should repro.core route through the Pallas kernels right now?"""
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    if os.environ.get("REPRO_NO_KERNELS", "0") == "1":
+        return False
+    if os.environ.get("REPRO_FORCE_KERNELS", "0") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def ops_kernels_enabled() -> bool:
+    """Should ops.* run its Pallas kernel (vs. the jnp oracle)?
+
+    Unlike the core dispatch, ops defaults to the kernel on every backend —
+    interpret mode on CPU is how the kernels are validated. Shares the
+    ``use_kernels`` override and the env kill switch with the core dispatch
+    so the two layers can never disagree (both read at call/trace time).
+    """
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    return os.environ.get("REPRO_NO_KERNELS", "0") != "1"
+
+
+# Alignment contract (f32 VREG/MXU tiling): panel rows in sublane multiples,
+# panel widths in lane multiples. ``ops`` pads up to the contract and slices
+# back, so callers never see it — but aligned shapes skip the copies.
+SUBLANE = 8
+LANE = 128
+
+
+def pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

@@ -1,62 +1,117 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers for the Pallas kernels — the dispatch seam.
 
-On CPU (this container) the kernels execute in ``interpret=True`` mode —
-the kernel bodies run as traced Python over VMEM-shaped blocks, which is how
-they are validated against ``ref.py``. On TPU set ``interpret=False`` (the
-default flips automatically based on the backend).
+``repro.core`` routes its hot operations here (see ``backend.dispatch_enabled``
+for when). Each wrapper enforces the kernels' alignment contract
+(rows % 8 == 0, panel width % 128 == 0 in f32) by zero-padding up to it and
+slicing the result back — padding with zeros is exact in exact arithmetic
+for every op in this family (extra zero rows/columns produce degenerate
+reflectors with tau = 0 and contribute nothing to any inner product); in
+floats the padded result differs from the unpadded kernel only by the
+backend regrouping reductions at the larger size (roundoff-level). Aligned
+shapes skip the copies entirely.
 
-``use_kernels(False)`` (or the REPRO_NO_KERNELS env var) routes every call to
-the pure-jnp oracle instead — the escape hatch the rest of the framework uses
-for shapes outside the kernels' alignment contract.
+``interpret`` resolves through ``backend.interpret_default()``: compiled
+Mosaic on TPU, interpreter elsewhere — nothing here hardcodes either.
+
+``use_kernels(False)`` (or REPRO_NO_KERNELS=1) routes every call to the
+pure-jnp oracle instead — the escape hatch for anything outside the
+kernels' envelope (non-f32 dtypes route automatically). The flag state
+lives in ``backend`` (shared with the core dispatch, read at trace time),
+so the two layers cannot disagree.
 """
 from __future__ import annotations
 
-import os
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend
 from repro.kernels import ref
 from repro.kernels import panel_qr as _panel
 from repro.kernels import stacked_qr as _stacked
 from repro.kernels import wy_apply as _wy
 
-_USE_KERNELS = os.environ.get("REPRO_NO_KERNELS", "0") != "1"
-
-
-def use_kernels(flag: bool) -> None:
-    global _USE_KERNELS
-    _USE_KERNELS = flag
+# shared override: use_kernels(None) restores the automatic policy
+use_kernels = backend.use_kernels
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return backend.interpret_default()
+
+
+def _kernel_ok(*arrays) -> bool:
+    return backend.ops_kernels_enabled() and all(
+        a.dtype == jnp.float32 for a in arrays
+    )
 
 
 def panel_qr(A: jax.Array, row_start=0) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """(Y, T, R) of the masked Householder panel QR of A (m, b)."""
-    if not _USE_KERNELS:
+    """(Y, T, R) of the masked Householder panel QR of A (m, b).
+
+    ``row_start`` may be traced; padding uses only static shape info
+    (rows pad by ``b_pad - b`` extra so the kernel's R extraction at any
+    legal row_start <= m - b stays in bounds).
+    """
+    if not _kernel_ok(A):
         return ref.panel_qr(A, row_start)
-    return _panel.panel_qr(A, jnp.asarray(row_start, jnp.int32), interpret=_interpret())
+    m, b = A.shape
+    b_pad = backend.pad_to(b, backend.LANE)
+    m_pad = backend.pad_to(m + (b_pad - b), backend.SUBLANE)
+    rs = jnp.asarray(row_start, jnp.int32)
+    if (m_pad, b_pad) == (m, b):
+        return _panel.panel_qr(A, rs, interpret=_interpret())
+    A_p = jnp.pad(A, ((0, m_pad - m), (0, b_pad - b)))
+    Y, T, R = _panel.panel_qr(A_p, rs, interpret=_interpret())
+    return Y[:m, :b], T[:b, :b], R[:b, :b]
 
 
 def stacked_qr(R_top: jax.Array, R_bot: jax.Array):
     """(Y2, T, R) of the TSQR tree combine."""
-    if not _USE_KERNELS:
+    if not _kernel_ok(R_top, R_bot):
         return ref.stacked_qr(R_top, R_bot)
-    return _stacked.stacked_qr(R_top, R_bot, interpret=_interpret())
+    b = R_top.shape[0]
+    b_pad = backend.pad_to(b, backend.LANE)
+    if b_pad == b:
+        return _stacked.stacked_qr(R_top, R_bot, interpret=_interpret())
+    pad = ((0, b_pad - b), (0, b_pad - b))
+    Y2, T, R = _stacked.stacked_qr(
+        jnp.pad(R_top, pad), jnp.pad(R_bot, pad), interpret=_interpret()
+    )
+    return Y2[:b, :b], T[:b, :b], R[:b, :b]
 
 
 def wy_apply(Y: jax.Array, T: jax.Array, C: jax.Array, block_n: int = 256) -> jax.Array:
-    """Fused Q^T C."""
-    if not _USE_KERNELS:
+    """Fused Q^T C. The trailing dim of C is tiled/padded by the kernel."""
+    if not _kernel_ok(Y, T, C):
         return ref.wy_apply(Y, T, C)
-    return _wy.wy_apply(Y, T, C, block_n=block_n, interpret=_interpret())
+    m, b = Y.shape
+    b_pad = backend.pad_to(b, backend.LANE)
+    m_pad = backend.pad_to(m, backend.SUBLANE)
+    if (m_pad, b_pad) == (m, b):
+        return _wy.wy_apply(Y, T, C, block_n=block_n, interpret=_interpret())
+    Y_p = jnp.pad(Y, ((0, m_pad - m), (0, b_pad - b)))
+    T_p = jnp.pad(T, ((0, b_pad - b), (0, b_pad - b)))
+    C_p = jnp.pad(C, ((0, m_pad - m), (0, 0)))
+    out = _wy.wy_apply(Y_p, T_p, C_p, block_n=block_n, interpret=_interpret())
+    return out[:m]
 
 
 def stacked_apply(Y2, T, C_top, C_bot, block_n: int = 512):
     """Fused trailing combine; returns (Ct_hat, Cb_hat, W)."""
-    if not _USE_KERNELS:
+    if not _kernel_ok(Y2, T, C_top, C_bot):
         return ref.stacked_apply(Y2, T, C_top, C_bot)
-    return _stacked.stacked_apply(Y2, T, C_top, C_bot, block_n=block_n, interpret=_interpret())
+    b = Y2.shape[0]
+    b_pad = backend.pad_to(b, backend.LANE)
+    if b_pad == b:
+        return _stacked.stacked_apply(
+            Y2, T, C_top, C_bot, block_n=block_n, interpret=_interpret()
+        )
+    bb = ((0, b_pad - b), (0, b_pad - b))
+    rows = ((0, b_pad - b), (0, 0))
+    ot, ob, W = _stacked.stacked_apply(
+        jnp.pad(Y2, bb), jnp.pad(T, bb),
+        jnp.pad(C_top, rows), jnp.pad(C_bot, rows),
+        block_n=block_n, interpret=_interpret(),
+    )
+    return ot[:b], ob[:b], W[:b]

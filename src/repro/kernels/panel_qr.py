@@ -83,13 +83,17 @@ def _panel_qr_kernel(rs_ref, a_ref, y_ref, t_ref, r_ref, *, num_cols: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def panel_qr(A: jax.Array, row_start: jax.Array, *, interpret: bool = True):
+def panel_qr(A: jax.Array, row_start: jax.Array, *, interpret: bool | None = None):
     """Pallas panel QR. Returns (Y, T, R) like ``ref.panel_qr``.
 
     A: (m, b) f32, m % 8 == 0 and b % 128 == 0 for full TPU tiling (the
-    kernel itself is shape-generic; alignment is a performance contract).
+    kernel itself is shape-generic; alignment is a performance contract —
+    ``ops.panel_qr`` pads up to it).
     row_start: scalar int32 — rows above it are frozen (CAQR sweep).
+    interpret: None resolves via ``backend.interpret_default()``.
     """
+    from repro.kernels import backend
+    interpret = backend.resolve_interpret(interpret)
     m, b = A.shape
     rs = jnp.asarray(row_start, jnp.int32).reshape((1,))
     kernel = functools.partial(_panel_qr_kernel, num_cols=b)

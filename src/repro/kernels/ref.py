@@ -3,6 +3,11 @@
 These are thin adapters over ``repro.core.householder`` — the numerics the
 whole system is validated against. Kernel tests sweep shapes/dtypes and
 ``assert_allclose`` kernel output against these.
+
+They bind the ``_``-prefixed *pure* forms, never the public dispatchers:
+the dispatchers route back into ``repro.kernels.ops`` when kernels are
+enabled, and the oracle must stay kernel-free (it is also ``ops``'s own
+fallback path).
 """
 from __future__ import annotations
 
@@ -16,22 +21,22 @@ from repro.core import householder as hh
 
 def panel_qr(A: jax.Array, row_start) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(Y, T, R) of the masked Householder panel QR."""
-    wy = hh.householder_qr_masked(A, jnp.asarray(row_start, jnp.int32))
+    wy = hh._householder_qr_masked(A, jnp.asarray(row_start, jnp.int32))
     return wy.Y, wy.T, wy.R
 
 
 def stacked_qr(R_top: jax.Array, R_bot: jax.Array):
     """(Y2, T, R) of the TSQR tree combine QR([R_top; R_bot])."""
-    sq = hh.stacked_qr(R_top, R_bot)
+    sq = hh._stacked_qr(R_top, R_bot)
     return sq.Y2, sq.T, sq.R
 
 
 def wy_apply(Y: jax.Array, T: jax.Array, C: jax.Array) -> jax.Array:
     """Q^T C = C - Y (T^T (Y^T C))."""
-    return hh.apply_qt(Y, T, C)
+    return hh._apply_qt(Y, T, C)
 
 
 def stacked_apply(Y2: jax.Array, T: jax.Array, C_top: jax.Array, C_bot: jax.Array):
     """Trailing tree combine: returns (C_top_hat, C_bot_hat, W)."""
     sq = hh.StackedQR(Y2=Y2, T=T, R=T)
-    return hh.stacked_apply_qt(sq, C_top, C_bot)
+    return hh._stacked_apply_qt(sq, C_top, C_bot)

@@ -76,8 +76,13 @@ def _stacked_qr_kernel(rt_ref, rb_ref, y2_ref, t_ref, r_ref, *, b: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def stacked_qr(R_top: jax.Array, R_bot: jax.Array, *, interpret: bool = True):
-    """(Y2, T, R) of QR([R_top; R_bot]); all (b, b)."""
+def stacked_qr(R_top: jax.Array, R_bot: jax.Array, *, interpret: bool | None = None):
+    """(Y2, T, R) of QR([R_top; R_bot]); all (b, b).
+
+    interpret: None resolves via ``backend.interpret_default()``.
+    """
+    from repro.kernels import backend
+    interpret = backend.resolve_interpret(interpret)
     b = R_top.shape[0]
     kernel = functools.partial(_stacked_qr_kernel, b=b)
     spec = pl.BlockSpec((b, b), lambda: (0, 0))
@@ -114,12 +119,15 @@ def stacked_apply(
     C_bot: jax.Array,
     *,
     block_n: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused trailing combine (paper Alg. 2 body). Returns (Ct_hat, Cb_hat, W).
 
     Y2, T: (b, b); C_top, C_bot: (b, n). Tiled over n.
+    interpret: None resolves via ``backend.interpret_default()``.
     """
+    from repro.kernels import backend
+    interpret = backend.resolve_interpret(interpret)
     b, n = C_top.shape
     n_pad = (-n) % block_n
     if n_pad:

@@ -48,12 +48,15 @@ def wy_apply(
     C: jax.Array,
     *,
     block_n: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fused Q^T C. Shapes: Y (m, b), T (b, b), C (m, n); returns (m, n).
 
     n is padded up to a multiple of ``block_n`` internally.
+    interpret: None resolves via ``backend.interpret_default()``.
     """
+    from repro.kernels import backend
+    interpret = backend.resolve_interpret(interpret)
     m, b = Y.shape
     mC, n = C.shape
     assert mC == m, (m, mC)

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 tests + benchmark smoke.
+#
+#   tools/ci.sh          tier-1 pytest (slow-marked tests excluded by
+#                        pytest.ini) + `benchmarks/run.py --quick`, which
+#                        also refreshes BENCH_core.json
+#   tools/ci.sh --slow   additionally run the slow-marked tests
+#                        (subprocess SPMD cells; need a newer jax)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+    echo "== slow tests =="
+    python -m pytest -q -m slow
+fi
+
+echo "== benchmark smoke (writes BENCH_core.json) =="
+python -m benchmarks.run --quick
+
+echo "CI OK"
