@@ -1,0 +1,117 @@
+"""Recovery-path benchmarks for the FT sweep driver (paper's two cost claims).
+
+(a) *Failure-free overhead*: maintaining the recovery bundles must not
+    significantly lengthen the critical path — measured as the jitted
+    windowed sweep with vs. without bundle collection, plus the level-stepped
+    driver's orchestration overhead on top of the jitted sweep (the driver is
+    the eager failure-injection harness, not the production hot path — the
+    gap quantifies what the level checkpoints cost in the simulator).
+
+(b) *Recovery latency*: wall time of one REBUILD as a function of (i) the
+    tree level the lane died at (deeper trailing levels mirror more bundle
+    rows) and (ii) the panel it died at (later panels replay more completed
+    panels from the re-read initial slice).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_recovery``;
+``benchmarks/run.py`` appends the record to ``BENCH_core.json`` under the
+``"recovery"`` key.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_core import _time
+from repro.core import SimComm, caqr_factorize
+from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+
+
+def _config(quick: bool):
+    return (4, 32, 128, 16) if quick else (8, 64, 256, 32)
+
+
+def bench_failure_free(quick: bool = False) -> Dict:
+    """(a) bundle maintenance + driver orchestration overhead, failure-free."""
+    P, m_loc, n, b = _config(quick)
+    comm = SimComm(P)
+    rng = np.random.default_rng(11)
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+
+    plain = jax.jit(
+        lambda a: caqr_factorize(a, comm, b, use_scan=False).R
+    )
+    bundled = jax.jit(
+        lambda a: caqr_factorize(a, comm, b, use_scan=False,
+                                 collect_bundles=True)[:3]
+    )
+    us_plain = _time(plain, A, iters=3)
+    us_bundled = _time(bundled, A, iters=3)
+    us_driver = _time(lambda a: ft_caqr_sweep(a, comm, b).R, A, iters=3)
+    return {
+        "config": {"P": P, "m_loc": m_loc, "n": n, "b": b, "quick": quick},
+        "us_sweep_no_bundles": us_plain,
+        "us_sweep_with_bundles": us_bundled,
+        "bundle_overhead": us_bundled / max(us_plain, 1e-9),
+        "us_driver_failure_free": us_driver,
+        "driver_overhead": us_driver / max(us_plain, 1e-9),
+    }
+
+
+def bench_latency(quick: bool = False) -> Dict:
+    """(b) REBUILD latency vs. tree level (fixed mid panel) and vs. panel
+    (fixed last trailing level). ``elapsed_s`` comes from the driver's own
+    per-event clock (blocks on the patched state)."""
+    P, m_loc, n, b = _config(quick)
+    comm = SimComm(P)
+    levels = P.bit_length() - 1
+    n_panels = n // b
+    rng = np.random.default_rng(12)
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+    lane = P - 1  # active at every panel of a square/tall sweep
+    k_mid = n_panels // 2
+
+    def one(point) -> Dict:
+        # two runs: the first pays the jit compiles of the recovery shapes,
+        # the second measures the steady-state REBUILD
+        for _ in range(2):
+            res = ft_caqr_sweep(
+                A, comm, b, schedule=FailureSchedule(events={point: [lane]})
+            )
+        (event,) = res.events
+        return {
+            "point": list(point),
+            "us_rebuild": event.elapsed_s * 1e6,
+            "fetches": len(event.reads),
+            "sources": len(event.sources),
+        }
+
+    by_level = [one(sweep_point(k_mid, ph, s))
+                for ph in ("tsqr", "trailing") for s in range(levels)]
+    ks = sorted({0, k_mid, n_panels - 1})
+    by_panel = [one(sweep_point(k, "trailing", levels - 1)) for k in ks]
+    return {
+        "config": {"P": P, "m_loc": m_loc, "n": n, "b": b, "lane": lane,
+                   "quick": quick},
+        "by_level": by_level,
+        "by_panel": by_panel,
+    }
+
+
+def suite(quick: bool = False) -> Dict:
+    return {
+        "failure_free": bench_failure_free(quick),
+        "latency": bench_latency(quick),
+    }
+
+
+def main() -> None:
+    import json
+
+    print(json.dumps(suite(quick=False), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -45,8 +45,23 @@ def main() -> None:
           f"full {t['us_full_sweep']:.0f}us, scan {t['us_scan_sweep']:.0f}us, "
           f"trailing-flop ratio {t['trailing_flop_ratio']:.2f}x")
 
+    from benchmarks import bench_recovery
+
+    recovery = bench_recovery.suite(quick=args.quick)
+    ff = recovery["failure_free"]
+    print()
+    print("# recovery: failure-free overhead + REBUILD latency")
+    print(f"# bundle maintenance: {ff['bundle_overhead']:.2f}x "
+          f"({ff['us_sweep_no_bundles']:.0f}us -> "
+          f"{ff['us_sweep_with_bundles']:.0f}us); "
+          f"driver harness: {ff['driver_overhead']:.2f}x")
+    print("point,us_rebuild,fetches,sources")
+    for row in recovery["latency"]["by_level"] + recovery["latency"]["by_panel"]:
+        pt = "-".join(str(x) for x in row["point"])
+        print(f"{pt},{row['us_rebuild']:.0f},{row['fetches']},{row['sources']}")
+
     record = {"schema": 1, "quick": args.quick, "rows": rows,
-              "sweep_cost": sweep}
+              "sweep_cost": sweep, "recovery": recovery}
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")

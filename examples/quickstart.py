@@ -31,3 +31,22 @@ faulty = rec.run_ft_trailing(
 )
 print(f"recovery after killing lane 3 at tree level 1: "
       f"bitwise-equal={np.array_equal(np.asarray(clean), np.asarray(faulty))}")
+
+# --- 3. the full sweep under a failure schedule (end-to-end REBUILD) --------
+from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+
+n_small = 64  # 4 panels, 3 tree levels
+A_small = A[:, :, :n_small]
+ref = caqr_factorize(A_small, SimComm(P), panel_width=b, use_scan=False,
+                     collect_bundles=True)
+schedule = FailureSchedule(events={
+    sweep_point(1, "trailing", 2): [3],   # lane 3 dies mid trailing tree
+    sweep_point(3, "tsqr", 0): [5],       # lane 5 dies mid TSQR, last panel
+})
+res_ft = ft_caqr_sweep(A_small, SimComm(P), panel_width=b, schedule=schedule)
+print(f"sweep with {len(res_ft.events)} lane deaths: R bitwise-equal to "
+      f"failure-free={np.array_equal(np.asarray(res_ft.R), np.asarray(ref.R))}")
+for e in res_ft.events:
+    print(f"  panel {e.point[0]} {e.point[1]} level {e.point[2]}: lane "
+          f"{e.lane} rebuilt from survivors {e.sources} "
+          f"({len(e.reads)} single-source fetches, {e.elapsed_s*1e3:.0f}ms)")

@@ -28,6 +28,7 @@ from repro.core.tsqr import (
     baseline_tsqr,
     dist_orthonormalize,
     ft_tsqr,
+    ft_tsqr_level,
     ft_tsqr_q,
     local_tsqr,
     local_tsqr_q,
@@ -35,15 +36,20 @@ from repro.core.tsqr import (
 )
 from repro.core.trailing import (
     RecoveryBundle,
+    TrailingLevelStep,
+    trailing_combine_level,
     trailing_update_baseline,
     trailing_update_ft,
 )
 from repro.core.caqr import (
     CAQRResult,
     PanelFactors,
+    assemble_R,
     caqr_apply_qt,
     caqr_factorize,
     caqr_factorize_spmd,
+    lane_geometry,
+    panel_geometry,
 )
 from repro.core import lstsq, recovery
 
@@ -52,8 +58,10 @@ __all__ = [
     "build_t", "householder_qr", "householder_qr_masked", "q_dense",
     "stacked_apply_q", "stacked_apply_qt", "stacked_qr", "ChainFactors",
     "DistTSQRFactors", "baseline_tsqr", "dist_orthonormalize", "ft_tsqr",
-    "ft_tsqr_q", "local_tsqr", "local_tsqr_q", "tsqr_orthonormalize",
-    "RecoveryBundle", "trailing_update_baseline", "trailing_update_ft",
-    "CAQRResult", "PanelFactors", "caqr_apply_qt", "caqr_factorize",
-    "caqr_factorize_spmd", "recovery", "lstsq",
+    "ft_tsqr_level", "ft_tsqr_q", "local_tsqr", "local_tsqr_q",
+    "tsqr_orthonormalize", "RecoveryBundle", "TrailingLevelStep",
+    "trailing_combine_level", "trailing_update_baseline",
+    "trailing_update_ft", "CAQRResult", "PanelFactors", "assemble_R",
+    "caqr_apply_qt", "caqr_factorize", "caqr_factorize_spmd",
+    "lane_geometry", "panel_geometry", "recovery", "lstsq",
 ]

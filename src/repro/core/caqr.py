@@ -53,6 +53,91 @@ class CAQRResult(NamedTuple):
     bundles: Optional[RecoveryBundle]  # stacked over panels, if requested
 
 
+def panel_geometry(comm, k: int, b: int, m_loc: int):
+    """Sweep bookkeeping of panel ``k`` (static): returns
+    ``(col0, t_lane, row_start, active)``.
+
+    ``col0``  — first column of the panel (the live-window start);
+    ``t_lane``— owner of global rows [col0, col0+b): the tree root where the
+                new R rows deposit;
+    ``row_start`` / ``active`` — per-lane offset of the C' block and the
+                participation flag (lanes whose rows are fully consumed by
+                earlier panels are inactive).
+    """
+    idx = comm.axis_index()
+    col0 = k * b
+    t_lane = col0 // m_loc
+    row_start_raw = col0 - idx * m_loc
+    active = row_start_raw < m_loc
+    row_start = jnp.clip(row_start_raw, 0, m_loc - b)
+    return col0, t_lane, row_start, active
+
+
+def lane_geometry(k: int, b: int, m_loc: int, lane: int):
+    """``panel_geometry`` for one concrete lane, as Python scalars — the
+    REBUILD replay (``repro.ft.driver``) recomputes a respawned lane's
+    bookkeeping with this (it is static data, not lost state)."""
+    col0 = k * b
+    row_start_raw = col0 - lane * m_loc
+    active = row_start_raw < m_loc
+    row_start = min(max(row_start_raw, 0), m_loc - b)
+    return col0, col0 // m_loc, row_start, active
+
+
+def assemble_R(comm, R_rows: jax.Array, n: int) -> jax.Array:
+    """Stack per-panel replicated R row-blocks (n_panels, [P,] b, n) into the
+    upper-triangular R (shared by the sweep and the FT driver)."""
+    P = comm.axis_size()
+    if isinstance(comm, SimComm):
+        R = R_rows.swapaxes(0, 1).reshape(P, n, n)
+        return jnp.triu(R)
+    return jnp.triu(R_rows.reshape(n, n))
+
+
+def advance_columns(comm, A_cur: jax.Array, window_next: jax.Array, col0: int):
+    """Reattach the updated live window to the (untouched) dead columns."""
+    return comm.map_local(
+        lambda A, W: jnp.concatenate([A[:, :col0], W], axis=1)
+    )(A_cur, window_next)
+
+
+def extract_r_rows(comm, C_final: jax.Array, t_lane: int, col0: int):
+    """The new R rows (global rows [col0, col0+b)) live at lane ``t_lane``'s
+    final C' block; replicate them (one b x n all-reduce — the FT broadcast)
+    and left-zero-pad back to full-width column indices."""
+    idx = comm.axis_index()
+    R_rows = comm.psum(
+        comm.where(idx == t_lane, C_final, jnp.zeros_like(C_final))
+    )
+    return comm.map_local(lambda r: jnp.pad(r, ((0, 0), (col0, 0))))(R_rows)
+
+
+def pad_bundle(bundle: RecoveryBundle, col0: int) -> RecoveryBundle:
+    """Left-zero-pad a window-width recovery bundle to full width so the
+    per-panel bundles stack (dead columns need no recovery)."""
+    return RecoveryBundle(
+        W=_pad_cols(bundle.W, col0),
+        C_self=_pad_cols(bundle.C_self, col0),
+        C_buddy=_pad_cols(bundle.C_buddy, col0),
+        Y2=bundle.Y2, T=bundle.T, self_was_top=bundle.self_was_top,
+    )
+
+
+def make_panel_factors(
+    comm, leaf_Y, leaf_T, level_Y2, level_T, row_start, active, t_lane
+) -> PanelFactors:
+    idx = comm.axis_index()
+    return PanelFactors(
+        leaf_Y=leaf_Y,
+        leaf_T=leaf_T,
+        level_Y2=level_Y2,
+        level_T=level_T,
+        row_start=row_start,
+        active=active,
+        target=jnp.broadcast_to(t_lane, jnp.shape(idx)),
+    )
+
+
 def _panel_step_windowed(comm, b: int, collect_bundles: bool, k: int, n: int):
     """One panel of the *windowed* right-looking sweep (static ``k``).
 
@@ -70,17 +155,10 @@ def _panel_step_windowed(comm, b: int, collect_bundles: bool, k: int, n: int):
     Fully-consumed lanes additionally skip their (identity) leaf apply via
     ``skip_consumed`` — the frozen-row skip.
     """
-    P = comm.axis_size()
-    idx = comm.axis_index()
-    col0 = k * b
-
     def body(A_cur):
         m_loc, _n = comm.local_shape(A_cur)
         assert _n == n
-        t_lane = col0 // m_loc  # static: owner of this panel's diagonal rows
-        row_start_raw = col0 - idx * m_loc
-        active = row_start_raw < m_loc
-        row_start = jnp.clip(row_start_raw, 0, m_loc - b)
+        col0, t_lane, row_start, active = panel_geometry(comm, k, b, m_loc)
 
         window = comm.map_local(lambda A: A[:, col0:])(A_cur)
         panel = comm.map_local(lambda W: W[:, :b])(window)
@@ -99,32 +177,13 @@ def _panel_step_windowed(comm, b: int, collect_bundles: bool, k: int, n: int):
             window, factors, comm, target=t_lane, row_start=row_start,
             active=active, dead_threshold=t_lane, skip_consumed=True,
         )
-        A_next = comm.map_local(
-            lambda A, W: jnp.concatenate([A[:, :col0], W], axis=1)
-        )(A_cur, win_next)
-
-        R_rows = comm.psum(
-            comm.where(idx == t_lane, C_final, jnp.zeros_like(C_final))
-        )
-        R_rows = comm.map_local(
-            lambda r: jnp.pad(r, ((0, 0), (col0, 0)))
-        )(R_rows)
+        A_next = advance_columns(comm, A_cur, win_next, col0)
+        R_rows = extract_r_rows(comm, C_final, t_lane, col0)
         if collect_bundles:
-            bundle = RecoveryBundle(
-                W=_pad_cols(bundle.W, col0),
-                C_self=_pad_cols(bundle.C_self, col0),
-                C_buddy=_pad_cols(bundle.C_buddy, col0),
-                Y2=bundle.Y2, T=bundle.T, self_was_top=bundle.self_was_top,
-            )
+            bundle = pad_bundle(bundle, col0)
 
-        panel_factors = PanelFactors(
-            leaf_Y=leaf_Y,
-            leaf_T=leaf_T,
-            level_Y2=level_Y2,
-            level_T=level_T,
-            row_start=row_start,
-            active=active,
-            target=jnp.broadcast_to(t_lane, jnp.shape(idx)),
+        panel_factors = make_panel_factors(
+            comm, leaf_Y, leaf_T, level_Y2, level_T, row_start, active, t_lane
         )
         out = (panel_factors, R_rows, bundle if collect_bundles else None)
         return A_next, out
@@ -250,11 +309,7 @@ def caqr_factorize(
         )
 
     # R_rows: (n_panels, b, n) replicated (SimComm: (n_panels, P, b, n)).
-    if isinstance(comm, SimComm):
-        R = R_rows.swapaxes(0, 1).reshape(P, n, n)
-        R = jnp.triu(R)
-    else:
-        R = jnp.triu(R_rows.reshape(n, n))
+    R = assemble_R(comm, R_rows, n)
     return CAQRResult(R=R, factors=factors, bundles=bundles)
 
 

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.comm import SimComm
-from repro.core.householder import apply_qt
+from repro.core.householder import apply_qt, householder_qr_masked
 from repro.core.trailing import _combine
 from repro.core.tsqr import DistTSQRFactors, _levels, _xor_perm, ft_tsqr
 
@@ -156,6 +156,86 @@ def inject_and_recover(
         level=dead.level,
     )
     return repaired, source
+
+
+# ---------------------------------------------------------------------------
+# Sweep-level single-source reconstruction primitives.
+#
+# These are the per-artifact REBUILD formulas the FT sweep driver
+# (``repro.ft.driver``) applies when a lane dies mid-sweep. Each function
+# receives ONLY the respawned lane's own re-read data plus the state of ONE
+# surviving lane (its buddy at the relevant tree level) — the single-source
+# property is enforced by the signatures, not by convention. All recompute
+# routes through the same kernel-dispatch seam as the failure-free path
+# (``householder_qr_masked`` / ``apply_qt`` / ``_combine``), so the rebuilt
+# values are bit-identical to what the dead lane would have computed.
+# ---------------------------------------------------------------------------
+
+
+def recompute_leaf(
+    rows: jax.Array, col0: int, b: int, row_start: int, active: bool
+):
+    """Recompute a respawned lane's masked leaf panel factors from its own
+    rebuilt block-row (paper: leaf state is never fetched — it is recomputed
+    from the re-read initial data). Returns ``(leaf_Y, leaf_T, R_leaf)`` with
+    the sweep's inactive-lane masking applied."""
+    if not active:
+        m_loc = rows.shape[0]
+        z = jnp.zeros((b, b), rows.dtype)
+        return jnp.zeros((m_loc, b), rows.dtype), z, z
+    wy = householder_qr_masked(
+        rows[:, col0:col0 + b], jnp.asarray(row_start, jnp.int32)
+    )
+    return wy.Y, wy.T, wy.R
+
+
+def rebuild_cprime_after_level(
+    C_fail_entering: jax.Array,
+    C_source_entering: jax.Array,
+    Y2: jax.Array,
+    T: jax.Array,
+    failed_was_top: bool,
+    pair_live: bool,
+) -> jax.Array:
+    """Paper §III-C REBUILD: the failed lane's C' *after* a tree level, from
+    the bundle of its buddy at that level (the single source).
+
+    The source's bundle holds both pair inputs (its own C' and the exchanged
+    copy of the failed lane's), so the recovery replays the exact pair
+    combine through ``_combine`` — the same seam-routed computation the level
+    originally ran — and keeps the failed lane's side. ``pair_live=False``
+    (a pair with a fully-consumed member) is the sweep's per-lane
+    pass-through. ``failed_was_top`` is static role data (derived from lane
+    index and tree target), the paper's ``role`` bundle field.
+    """
+    if not pair_live:
+        return C_fail_entering
+    C_top = C_fail_entering if failed_was_top else C_source_entering
+    C_bot = C_source_entering if failed_was_top else C_fail_entering
+    new_top, new_bot, _W = _combine(Y2, T, C_top, C_bot)
+    return new_top if failed_was_top else new_bot
+
+
+def rebuild_block_row_through_panel(
+    rows: jax.Array,
+    leaf_Y: jax.Array,
+    leaf_T: jax.Array,
+    C_prime_final: jax.Array,
+    col0: int,
+    row_start: int,
+    active: bool,
+) -> jax.Array:
+    """Advance a respawned lane's block-row through one completed panel:
+    re-apply the (recomputed) leaf reflectors to the live window and write
+    back the recovered final C' — the replay analogue of the sweep's
+    leaf-apply + writeback. ``C_prime_final`` comes from ONE survivor via
+    ``rebuild_cprime_after_level`` at the tree's last level."""
+    window = apply_qt(leaf_Y, leaf_T, rows[:, col0:])
+    if active:
+        window = window.at[row_start:row_start + C_prime_final.shape[0]].set(
+            C_prime_final
+        )
+    return jnp.concatenate([rows[:, :col0], window], axis=1)
 
 
 def tsqr_recover_r(factors: DistTSQRFactors, failed: int, source: int) -> jax.Array:

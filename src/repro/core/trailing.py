@@ -72,6 +72,66 @@ def _combine(Y2, T, C_top, C_bot):
     return C_top - W, C_bot - Y2 @ W, W
 
 
+class TrailingLevelStep(NamedTuple):
+    """Output of one trailing-combine level: the advanced C' plus this
+    level's slice of the recovery bundle (what each lane must retain)."""
+
+    C_prime: jax.Array  # (b, n) advanced C' per lane
+    W: jax.Array        # (b, n) the level's shared W (pair_live-masked)
+    C_self: jax.Array   # (b, n) this lane's C' entering the level
+    C_buddy: jax.Array  # (b, n) the buddy's C' received at the level
+    is_top: jax.Array   # ()    was this lane the top of its pair
+
+
+def trailing_combine_level(
+    comm,
+    C_prime: jax.Array,
+    Y2: jax.Array,
+    T: jax.Array,
+    step: int,
+    target,
+    dead_threshold,
+    paper_semantics: bool = False,
+) -> TrailingLevelStep:
+    """One tree level of Algorithm 2's trailing update.
+
+    The pair exchanges C' in a single sendrecv, BOTH lanes compute the
+    T-dependent W redundantly (paper Alg. 2 lines 5/14 and 9/18), and each
+    keeps the level's recovery bundle slice. Zeroed (Y2, T) make the combine
+    a pass-through; a pair with a dead member passes through per lane.
+
+    The whole-tree ``trailing_update_ft`` loops over this function, and the
+    level-stepped FT sweep driver (``repro.ft.driver``) interleaves it with
+    failure checkpoints — both paths run the same floating-point program.
+    """
+    P = comm.axis_size()
+    idx = comm.axis_index()
+    # sendrecv: one bidirectional collective-permute — the paper's
+    # exchange; on full-duplex links this costs one one-way hop.
+    C_buddy = comm.ppermute(C_prime, _xor_perm(P, step))
+    tbit = (target >> step) & 1
+    is_top = ((idx >> step) & 1) == tbit
+    C_top = comm.where(is_top, C_prime, C_buddy)
+    C_bot = comm.where(is_top, C_buddy, C_prime)
+    new_top, new_bot, W = _combine(Y2, T, C_top, C_bot)
+    # Per-lane pass-through: a pair with a dead member does not combine.
+    buddy_idx = idx ^ (1 << step)
+    pair_live = jnp.logical_and(
+        idx >= dead_threshold, buddy_idx >= dead_threshold
+    )
+    if paper_semantics:
+        # Alg. 2 verbatim: only lanes that survived all earlier levels
+        # (low bits zero) participate; the top lane retires afterwards.
+        participates = (idx % (1 << step)) == 0
+        pair_live = jnp.logical_and(pair_live, participates)
+    W = comm.where(pair_live, W, jnp.zeros_like(W))
+    C_next = comm.where(is_top, new_top, new_bot)
+    C_next = comm.where(pair_live, C_next, C_prime)
+    return TrailingLevelStep(
+        C_prime=C_next, W=W, C_self=C_prime, C_buddy=C_buddy, is_top=is_top
+    )
+
+
 def _leaf_apply(comm, factors: DistTSQRFactors, C_local, row_start,
                 active=None, skip_consumed: bool = False):
     """Local Q^T apply + extract the C' block at each lane's row_start.
@@ -180,35 +240,15 @@ def trailing_update_ft(
 
     Ws, Cs_self, Cs_buddy, tops = [], [], [], []
     for step in range(levels):
-        # sendrecv: one bidirectional collective-permute — the paper's
-        # exchange; on full-duplex links this costs one one-way hop.
-        C_buddy = comm.ppermute(C_prime, _xor_perm(P, step))
-        tbit = (target >> step) & 1
-        is_top = ((idx >> step) & 1) == tbit
-        C_top = comm.where(is_top, C_prime, C_buddy)
-        C_bot = comm.where(is_top, C_buddy, C_prime)
-        Y2 = factors.level_Y2[step]
-        T = factors.level_T[step]
-        # BOTH lanes compute the T-dependent W redundantly (paper Alg. 2
-        # lines 5/14 and 9/18). Zeroed (Y2, T) make this a pass-through.
-        new_top, new_bot, W = _combine(Y2, T, C_top, C_bot)
-        # Per-lane pass-through: a pair with a dead member does not combine.
-        buddy_idx = idx ^ (1 << step)
-        pair_live = jnp.logical_and(
-            idx >= dead_threshold, buddy_idx >= dead_threshold
+        out = trailing_combine_level(
+            comm, C_prime, factors.level_Y2[step], factors.level_T[step],
+            step, target, dead_threshold, paper_semantics=paper_semantics,
         )
-        if paper_semantics:
-            # Alg. 2 verbatim: only lanes that survived all earlier levels
-            # (low bits zero) participate; the top lane retires afterwards.
-            participates = (idx % (1 << step)) == 0
-            pair_live = jnp.logical_and(pair_live, participates)
-        W = comm.where(pair_live, W, jnp.zeros_like(W))
-        Ws.append(W)
-        Cs_self.append(C_prime)
-        Cs_buddy.append(C_buddy)
-        tops.append(is_top)
-        C_next = comm.where(is_top, new_top, new_bot)
-        C_prime = comm.where(pair_live, C_next, C_prime)
+        Ws.append(out.W)
+        Cs_self.append(out.C_self)
+        Cs_buddy.append(out.C_buddy)
+        tops.append(out.is_top)
+        C_prime = out.C_prime
 
     C_out = _writeback(comm, C_local, C_prime, row_start, active)
 

@@ -163,6 +163,55 @@ def _levels(P: int) -> int:
     return P.bit_length() - 1
 
 
+def ft_tsqr_level(
+    comm,
+    R: jax.Array,
+    step: int,
+    target,
+    active_threshold,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One level of the FT butterfly (paper Fig. 2) over current R factors.
+
+    The pair ``(i, i ^ 2^step)`` exchanges R in one sendrecv and BOTH lanes
+    compute the identical stacked QR — the redundancy doubling that recovery
+    exploits. Returns ``(R_next, Y2, T)`` with the group-activity masking
+    applied (zeroed factors == pass-through).
+
+    This is the single-level step the level-stepped FT sweep driver
+    (``repro.ft.driver``) interleaves with failure checkpoints; the whole-tree
+    ``ft_tsqr_combine`` below loops over it, so the two paths are the same
+    floating-point program.
+    """
+    idx = comm.axis_index()
+    P = comm.axis_size()
+    R_buddy = comm.ppermute(R, _xor_perm(P, step))
+    # Orientation: the TOP block of each pair is the lane whose index bit
+    # matches the target's bit, so the lane that is top at EVERY level is
+    # exactly ``target`` — that is where the R (and the trailing R_12
+    # rows) deposit. Default target P-1 == paper's odd-on-top convention.
+    tbit = (target >> step) & 1
+    is_top = ((idx >> step) & 1) == tbit
+    R_top = comm.where(is_top, R, R_buddy)
+    R_bot = comm.where(is_top, R_buddy, R)
+    sq = comm.map_local(stacked_qr)(R_top, R_bot)
+    # Group-activity masking (CAQR sweep): a group of 2^step lanes is
+    # fully consumed iff its max lane < active_threshold.
+    group = 1 << step
+    my_base = idx & ~(group - 1)
+    sib_base = (idx ^ group) & ~(group - 1)
+    my_dead = my_base + group <= active_threshold
+    sib_dead = sib_base + group <= active_threshold
+    both_live = jnp.logical_and(~my_dead, ~sib_dead)
+    R_next = comm.where(
+        both_live,
+        sq.R,
+        comm.where(my_dead, R_buddy, R),  # adopt / pass-through
+    )
+    Y2 = comm.where(both_live, sq.Y2, jnp.zeros_like(sq.Y2))
+    T = comm.where(both_live, sq.T, jnp.zeros_like(sq.T))
+    return R_next, Y2, T
+
+
 def ft_tsqr_combine(
     comm,
     R: jax.Array,
@@ -182,38 +231,14 @@ def ft_tsqr_combine(
     """
     P = comm.axis_size()
     levels = _levels(P)
-    idx = comm.axis_index()
-    b = comm.local_shape(R)[-1]
     if active_threshold is None:
         active_threshold = jnp.zeros((), jnp.int32)
 
     Y2s, Ts = [], []
     for step in range(levels):
-        R_buddy = comm.ppermute(R, _xor_perm(P, step))
-        # Orientation: the TOP block of each pair is the lane whose index bit
-        # matches the target's bit, so the lane that is top at EVERY level is
-        # exactly ``target`` — that is where the R (and the trailing R_12
-        # rows) deposit. Default target P-1 == paper's odd-on-top convention.
-        tbit = (target >> step) & 1
-        is_top = ((idx >> step) & 1) == tbit
-        R_top = comm.where(is_top, R, R_buddy)
-        R_bot = comm.where(is_top, R_buddy, R)
-        sq = comm.map_local(stacked_qr)(R_top, R_bot)
-        # Group-activity masking (CAQR sweep): a group of 2^step lanes is
-        # fully consumed iff its max lane < active_threshold.
-        group = 1 << step
-        my_base = idx & ~(group - 1)
-        sib_base = (idx ^ group) & ~(group - 1)
-        my_dead = my_base + group <= active_threshold
-        sib_dead = sib_base + group <= active_threshold
-        both_live = jnp.logical_and(~my_dead, ~sib_dead)
-        R = comm.where(
-            both_live,
-            sq.R,
-            comm.where(my_dead, R_buddy, R),  # adopt / pass-through
-        )
-        Y2s.append(comm.where(both_live, sq.Y2, jnp.zeros_like(sq.Y2)))
-        Ts.append(comm.where(both_live, sq.T, jnp.zeros_like(sq.T)))
+        R, Y2, T = ft_tsqr_level(comm, R, step, target, active_threshold)
+        Y2s.append(Y2)
+        Ts.append(T)
 
     if levels:
         level_Y2 = jnp.stack(Y2s)

@@ -1,4 +1,11 @@
-"""Fault-tolerance substrate: semantics, failure injection, elastic re-mesh."""
-from repro.ft import elastic, failures, semantics, stragglers
+"""Fault-tolerance substrate: semantics, failure injection, elastic re-mesh,
+and the end-to-end FT-CAQR sweep driver."""
+from repro.ft import driver, elastic, failures, semantics, stragglers
+from repro.ft.driver import FTSweepDriver, FTSweepResult, RecoveryEvent, ft_caqr_sweep
+from repro.ft.failures import FailureSchedule, UnrecoverableFailure, sweep_point
 from repro.ft.semantics import Semantics
-__all__ = ["elastic", "failures", "semantics", "stragglers", "Semantics"]
+__all__ = [
+    "driver", "elastic", "failures", "semantics", "stragglers", "Semantics",
+    "FTSweepDriver", "FTSweepResult", "RecoveryEvent", "ft_caqr_sweep",
+    "FailureSchedule", "UnrecoverableFailure", "sweep_point",
+]

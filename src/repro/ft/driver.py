@@ -1,0 +1,452 @@
+"""Fault-tolerant execution driver for the windowed CAQR sweep (paper §II-III).
+
+This is the end-to-end form of the paper's claim: run the *entire* windowed
+right-looking FT-CAQR sweep while lanes die at scheduled points — at any
+panel, after any TSQR butterfly level or trailing-combine level — and finish
+with ``R``, the per-panel implicit-Q factors, and the recovery bundles
+**bit-identical** to the failure-free run (the recovery regression oracle).
+
+Execution model
+---------------
+The driver runs the sweep level-stepped over a ``SimComm`` (the P-lane
+single-device simulator — the only place lanes are killable without real
+processes), calling the *same* single-level primitives the production sweep
+is built from: ``ft_tsqr_level`` (core/tsqr), ``trailing_combine_level`` and
+``_leaf_apply``/``_writeback`` (core/trailing), and the geometry/assembly
+helpers of ``core/caqr``. Failure-free, the two paths are the same
+floating-point program, so bit-identity holds by construction.
+
+Failure model (paper §II, ULFM REBUILD semantics)
+-------------------------------------------------
+A ``FailureSchedule`` keyed by ``sweep_point(panel, phase, level)`` kills
+lanes at interruptible points; death is *simulated faithfully*: every float
+the lane holds — its block-row, leaf/ladder factors, C', stored per-panel
+factors and bundles — is overwritten with NaN, so any read of dead state
+poisons the result and the bit-identity oracle catches it.
+
+Recovery (paper §III-B/III-C REBUILD)
+-------------------------------------
+The respawned lane is rebuilt from (a) its own slice of the *initial*
+matrix, re-read from the data source, and (b) per lost artifact, the state
+of exactly ONE surviving lane — its XOR-buddy at the relevant tree level:
+
+* previous panels — leaf factors are *recomputed* from the re-read rows
+  (never fetched; they are lane-private), the final C' of each panel comes
+  from the last-level buddy's bundle ``{W, T, C', Y2, role}``, and the
+  lane's own bundle rows are mirrors of each level-buddy's
+  (``W`` is pair-shared, ``C_self``/``C_buddy`` swap);
+* current panel, mid-TSQR — the butterfly ladder ``(Y2, T)`` and the running
+  R are identical at the level-0 buddy (lanes ``i`` and ``i^1`` agree at
+  every level: same pair at level 0, same ``i >> (s+1)`` group above), so
+  one copy restores them;
+* current panel, mid-trailing — C' after the last completed level ``s`` is
+  rebuilt from the level-``s`` buddy's bundle by replaying the pair combine
+  through ``_combine`` (the same kernel-dispatch seam as the failure-free
+  path) and keeping the failed side.
+
+Each rebuilt artifact therefore reads ONE survivor (recorded in the event's
+ledger — the single-source property is enforced by construction); a full
+mid-sweep rebuild touches at most ``log2 P`` distinct survivors across
+artifact classes. If a needed buddy is itself dead (e.g. both members of a
+pair killed at the same point), ``UnrecoverableFailure`` is raised — that is
+the honest limit of one-level redundancy doubling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import recovery as rec
+from repro.core.caqr import (
+    PanelFactors,
+    advance_columns,
+    assemble_R,
+    extract_r_rows,
+    lane_geometry,
+    make_panel_factors,
+    pad_bundle,
+    panel_geometry,
+)
+from repro.core.comm import SimComm
+from repro.core.householder import apply_qt, householder_qr_masked
+from repro.core.tsqr import DistTSQRFactors, _levels, ft_tsqr_level
+from repro.core.trailing import (
+    RecoveryBundle,
+    _leaf_apply,
+    _writeback,
+    trailing_combine_level,
+)
+from repro.ft.failures import (
+    Detector,
+    FailureSchedule,
+    PHASE_LEAF,
+    PHASE_TRAILING,
+    PHASE_TSQR,
+    UnrecoverableFailure,
+    sweep_point,
+)
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    """One REBUILD: which lane died where, and the single-source read ledger
+    (artifact name -> the one surviving lane it was fetched from)."""
+
+    point: Tuple[int, str, int]
+    lane: int
+    reads: Dict[str, int]
+    elapsed_s: float
+
+    @property
+    def sources(self) -> List[int]:
+        return sorted(set(self.reads.values()))
+
+
+class FTSweepResult(NamedTuple):
+    """Same layout as ``CAQRResult(collect_bundles=True)`` plus the recovery
+    event log."""
+
+    R: jax.Array
+    factors: PanelFactors
+    bundles: RecoveryBundle
+    events: List[RecoveryEvent]
+
+
+def _poison(x: jax.Array, lane: int, lane_axis: int = 0) -> jax.Array:
+    """NaN out one lane's slice (float leaves only — int/bool bookkeeping is
+    index-derived static data a respawned process recomputes trivially)."""
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    index = (slice(None),) * lane_axis + (lane,)
+    return x.at[index].set(jnp.nan)
+
+
+class FTSweepDriver:
+    """Level-stepped windowed CAQR sweep with failure injection + REBUILD.
+
+    ``A0`` is the initial matrix in SimComm layout ``(P, m_loc, n)`` — it
+    doubles as the re-readable data source of the paper's recovery model.
+    """
+
+    def __init__(
+        self,
+        A0: jax.Array,
+        comm: SimComm,
+        panel_width: int,
+        schedule: Optional[FailureSchedule] = None,
+        detector: Optional[Detector] = None,
+    ):
+        assert isinstance(comm, SimComm), (
+            "the FT driver kills lanes; only the SimComm simulator supports "
+            "that on a single device (the SPMD path needs real processes)"
+        )
+        self.comm = comm
+        self.P = comm.axis_size()
+        self.levels = _levels(self.P)
+        assert self.levels >= 1, "need at least 2 lanes to tolerate failures"
+        self.b = panel_width
+        self.m_loc, self.n = comm.local_shape(A0)
+        assert self.m_loc % self.b == 0 and self.n % self.b == 0
+        assert self.n <= self.P * self.m_loc
+        self.n_panels = self.n // self.b
+        self.A0 = A0
+        self.A = A0
+        self.detector = detector or Detector(self.P, schedule)
+        # stored sweep outputs, one entry per completed panel
+        self.factors: List[PanelFactors] = []
+        self.R_rows: List[jax.Array] = []
+        self.bundles: List[RecoveryBundle] = []
+        self.events: List[RecoveryEvent] = []
+
+    # -- sweep -------------------------------------------------------------
+
+    def run(self) -> FTSweepResult:
+        for k in range(self.n_panels):
+            self._run_panel(k)
+        factors = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.factors)
+        bundles = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.bundles)
+        R = assemble_R(self.comm, jnp.stack(self.R_rows), self.n)
+        return FTSweepResult(R=R, factors=factors, bundles=bundles,
+                             events=self.events)
+
+    def _run_panel(self, k: int) -> None:
+        comm, b = self.comm, self.b
+        col0, t_lane, row_start, active = panel_geometry(comm, k, b, self.m_loc)
+        self._k, self._col0, self._t_lane = k, col0, t_lane
+        # in-flight per-panel state (what a mid-panel death obliterates)
+        self._window = comm.map_local(lambda A: A[:, col0:])(self.A)
+        self._R_carry = None
+        self._Y2s: List[jax.Array] = []
+        self._Ts: List[jax.Array] = []
+        self._level_Y2 = self._level_T = None
+        self._C_local = self._C_prime = None
+        self._Ws: List[jax.Array] = []
+        self._Cs_self: List[jax.Array] = []
+        self._Cs_buddy: List[jax.Array] = []
+        self._tops: List[jax.Array] = []
+
+        # leaf: local masked panel QR
+        panel = comm.map_local(lambda W: W[:, :b])(self._window)
+        wy = comm.map_local(householder_qr_masked)(panel, row_start)
+        self._leaf_Y = comm.where(active, wy.Y, jnp.zeros_like(wy.Y))
+        self._leaf_T = comm.where(active, wy.T, jnp.zeros_like(wy.T))
+        self._R_leaf = comm.where(active, wy.R, jnp.zeros_like(wy.R))
+        self._checkpoint(sweep_point(k, PHASE_LEAF))
+
+        # FT-TSQR butterfly, one checkpoint per level
+        self._R_carry = self._R_leaf
+        for s in range(self.levels):
+            R_next, Y2, T = ft_tsqr_level(comm, self._R_carry, s, t_lane, t_lane)
+            self._R_carry = R_next
+            self._Y2s.append(Y2)
+            self._Ts.append(T)
+            self._checkpoint(sweep_point(k, PHASE_TSQR, s))
+        self._level_Y2 = jnp.stack(self._Y2s)
+        self._level_T = jnp.stack(self._Ts)
+
+        # trailing update (Algorithm 2), one checkpoint per level
+        dist = DistTSQRFactors(self._leaf_Y, self._leaf_T, self._level_Y2,
+                               self._level_T, self._R_leaf)
+        C_local, C_prime = _leaf_apply(comm, dist, self._window, row_start,
+                                       active=active, skip_consumed=True)
+        self._C_local = C_local
+        self._C_prime = comm.where(active, C_prime, jnp.zeros_like(C_prime))
+        for s in range(self.levels):
+            out = trailing_combine_level(
+                comm, self._C_prime, self._level_Y2[s], self._level_T[s],
+                s, t_lane, t_lane,
+            )
+            self._Ws.append(out.W)
+            self._Cs_self.append(out.C_self)
+            self._Cs_buddy.append(out.C_buddy)
+            self._tops.append(out.is_top)
+            self._C_prime = out.C_prime
+            self._checkpoint(sweep_point(k, PHASE_TRAILING, s))
+
+        # writeback + panel outputs (the windowed sweep's own deposit helpers)
+        C_out = _writeback(comm, self._C_local, self._C_prime, row_start, active)
+        self.A = advance_columns(comm, self.A, C_out, col0)
+        self.R_rows.append(extract_r_rows(comm, self._C_prime, t_lane, col0))
+        self.bundles.append(pad_bundle(RecoveryBundle(
+            W=jnp.stack(self._Ws),
+            C_self=jnp.stack(self._Cs_self),
+            C_buddy=jnp.stack(self._Cs_buddy),
+            Y2=self._level_Y2,
+            T=self._level_T,
+            self_was_top=jnp.stack(self._tops),
+        ), col0))
+        self.factors.append(make_panel_factors(
+            comm, self._leaf_Y, self._leaf_T, self._level_Y2, self._level_T,
+            row_start, active, t_lane,
+        ))
+
+    # -- failure injection + REBUILD ---------------------------------------
+
+    def _checkpoint(self, point: Tuple[int, str, int]) -> None:
+        newly = self.detector.begin_step(point)
+        for lane in newly:          # all deaths at this point strike first,
+            self._obliterate(lane)  # then recovery runs one lane at a time
+        for lane in newly:
+            # drain the async-dispatched sweep prefix first, so the latency
+            # clock covers only the REBUILD itself (then everything the
+            # rebuild patched)
+            self._sync()
+            t0 = time.perf_counter()
+            reads = self._rebuild(lane, point)
+            self._sync()
+            self.detector.revive(lane)
+            self.events.append(RecoveryEvent(
+                point=point, lane=lane, reads=reads,
+                elapsed_s=time.perf_counter() - t0,
+            ))
+
+    def _sync(self) -> None:
+        jax.block_until_ready([
+            x for x in (
+                self.A, self._window, self._leaf_Y, self._leaf_T,
+                self._R_leaf, self._R_carry, self._level_Y2, self._level_T,
+                self._C_local, self._C_prime,
+                *self._Y2s, *self._Ts, *self._Ws, *self._Cs_self,
+                *self._Cs_buddy, *self.factors, *self.bundles, *self.R_rows,
+            ) if x is not None
+        ])
+
+    def _obliterate(self, lane: int) -> None:
+        """Process death: NaN every float the lane holds — current block-row,
+        in-flight panel state, and its slices of all stored sweep outputs."""
+        self.A = _poison(self.A, lane)
+        self._window = _poison(self._window, lane)
+        self._leaf_Y = _poison(self._leaf_Y, lane)
+        self._leaf_T = _poison(self._leaf_T, lane)
+        self._R_leaf = _poison(self._R_leaf, lane)
+        if self._R_carry is not None:
+            self._R_carry = _poison(self._R_carry, lane)
+        self._Y2s = [_poison(x, lane) for x in self._Y2s]
+        self._Ts = [_poison(x, lane) for x in self._Ts]
+        if self._level_Y2 is not None:
+            self._level_Y2 = _poison(self._level_Y2, lane, 1)
+            self._level_T = _poison(self._level_T, lane, 1)
+        if self._C_local is not None:
+            self._C_local = _poison(self._C_local, lane)
+            self._C_prime = _poison(self._C_prime, lane)
+        self._Ws = [_poison(x, lane) for x in self._Ws]
+        self._Cs_self = [_poison(x, lane) for x in self._Cs_self]
+        self._Cs_buddy = [_poison(x, lane) for x in self._Cs_buddy]
+        for j in range(len(self.factors)):
+            fj = self.factors[j]
+            self.factors[j] = PanelFactors(
+                leaf_Y=_poison(fj.leaf_Y, lane),
+                leaf_T=_poison(fj.leaf_T, lane),
+                level_Y2=_poison(fj.level_Y2, lane, 1),
+                level_T=_poison(fj.level_T, lane, 1),
+                row_start=fj.row_start, active=fj.active, target=fj.target,
+            )
+            bj = self.bundles[j]
+            self.bundles[j] = RecoveryBundle(
+                W=_poison(bj.W, lane, 1),
+                C_self=_poison(bj.C_self, lane, 1),
+                C_buddy=_poison(bj.C_buddy, lane, 1),
+                Y2=_poison(bj.Y2, lane, 1),
+                T=_poison(bj.T, lane, 1),
+                self_was_top=bj.self_was_top,
+            )
+            self.R_rows[j] = _poison(self.R_rows[j], lane)
+
+    def _rebuild(self, lane: int, point: Tuple[int, str, int]) -> Dict[str, int]:
+        """The paper's REBUILD: respawn ``lane``, re-read its initial slice,
+        replay completed panels, restore the in-flight panel state — each
+        lost artifact from exactly one surviving buddy."""
+        reads: Dict[str, int] = {}
+
+        def fetch(artifact: str, source: int) -> int:
+            if source == lane or source in self.detector.dead:
+                raise UnrecoverableFailure(
+                    f"rebuilding lane {lane} at {point} needs {artifact} "
+                    f"from lane {source}, which is not a live survivor"
+                )
+            reads[artifact] = source
+            return source
+
+        k = self._k
+        rows = self.A0[lane]  # respawn: re-read from the data source
+        for j in range(k):
+            rows = self._replay_panel(j, lane, rows, fetch)
+
+        # current panel: recompute the masked leaf from the rebuilt rows
+        col0, t_lane, rs, act = lane_geometry(k, self.b, self.m_loc, lane)
+        lY, lT, lR = rec.recompute_leaf(rows, col0, self.b, rs, act)
+        self._leaf_Y = self._leaf_Y.at[lane].set(lY)
+        self._leaf_T = self._leaf_T.at[lane].set(lT)
+        self._R_leaf = self._R_leaf.at[lane].set(lR)
+        self.A = self.A.at[lane].set(rows)
+        self._window = self._window.at[lane].set(rows[:, col0:])
+
+        _, phase, lvl = point
+        if phase == PHASE_TSQR:
+            # ladder + running R: identical at the level-0 buddy (see module
+            # docstring) — one copy restores all completed levels
+            src = fetch("tsqr.ladder+R", lane ^ 1)
+            for i in range(lvl + 1):
+                self._Y2s[i] = self._Y2s[i].at[lane].set(self._Y2s[i][src])
+                self._Ts[i] = self._Ts[i].at[lane].set(self._Ts[i][src])
+            self._R_carry = self._R_carry.at[lane].set(self._R_carry[src])
+        elif phase == PHASE_TRAILING:
+            src = fetch("tsqr.ladder", lane ^ 1)
+            self._level_Y2 = self._level_Y2.at[:, lane].set(self._level_Y2[:, src])
+            self._level_T = self._level_T.at[:, lane].set(self._level_T[:, src])
+            # leaf-applied window: local recompute through the same seam
+            self._C_local = self._C_local.at[lane].set(
+                apply_qt(lY, lT, rows[:, col0:])
+            )
+            # C' after the last completed level: ONE fetch from that level's
+            # buddy, replayed through the seam-routed pair combine
+            src_c = fetch(f"trailing.cprime@level{lvl}", lane ^ (1 << lvl))
+            failed_was_top = ((lane >> lvl) & 1) == ((t_lane >> lvl) & 1)
+            cp = rec.rebuild_cprime_after_level(
+                self._Cs_buddy[lvl][src_c], self._Cs_self[lvl][src_c],
+                self._level_Y2[lvl, lane], self._level_T[lvl, lane],
+                failed_was_top,
+                pair_live=(lane >= t_lane and src_c >= t_lane),
+            )
+            self._C_prime = self._C_prime.at[lane].set(cp)
+            # the lane's own bundle rows: mirror of each level-buddy's entry
+            # (W is pair-shared; C_self/C_buddy swap sides)
+            for s in range(lvl + 1):
+                src_s = fetch(f"trailing.bundle@level{s}", lane ^ (1 << s))
+                w_s = self._Ws[s][src_s]
+                c_self = self._Cs_buddy[s][src_s]
+                c_buddy = self._Cs_self[s][src_s]
+                self._Ws[s] = self._Ws[s].at[lane].set(w_s)
+                self._Cs_self[s] = self._Cs_self[s].at[lane].set(c_self)
+                self._Cs_buddy[s] = self._Cs_buddy[s].at[lane].set(c_buddy)
+        return reads
+
+    def _replay_panel(self, j: int, lane: int, rows: jax.Array, fetch) -> jax.Array:
+        """Advance the respawned lane's block-row through completed panel
+        ``j`` and restore its slices of that panel's stored outputs."""
+        L = self.levels
+        col0, t_lane, rs, act = lane_geometry(j, self.b, self.m_loc, lane)
+        lY, lT, _lR = rec.recompute_leaf(rows, col0, self.b, rs, act)
+
+        src_l = fetch(f"panel{j}.tsqr_ladder", lane ^ 1)
+        fj = self.factors[j]
+        self.factors[j] = PanelFactors(
+            leaf_Y=fj.leaf_Y.at[lane].set(lY),
+            leaf_T=fj.leaf_T.at[lane].set(lT),
+            level_Y2=fj.level_Y2.at[:, lane].set(fj.level_Y2[:, src_l]),
+            level_T=fj.level_T.at[:, lane].set(fj.level_T[:, src_l]),
+            row_start=fj.row_start, active=fj.active, target=fj.target,
+        )
+        src_r = fetch(f"panel{j}.r_rows", lane ^ 1)
+        self.R_rows[j] = self.R_rows[j].at[lane].set(self.R_rows[j][src_r])
+
+        # final C' of panel j: one fetch from the last-level buddy's bundle
+        bj = self.bundles[j]
+        cp = None
+        if act:
+            src_c = fetch(f"panel{j}.cprime_final", lane ^ (1 << (L - 1)))
+            failed_was_top = ((lane >> (L - 1)) & 1) == ((t_lane >> (L - 1)) & 1)
+            # stored bundles are zero-padded to full width; slice back to the
+            # live window so the replayed combine runs at the original width
+            cp = rec.rebuild_cprime_after_level(
+                bj.C_buddy[L - 1, src_c, :, col0:],
+                bj.C_self[L - 1, src_c, :, col0:],
+                bj.Y2[L - 1, src_c], bj.T[L - 1, src_c],
+                failed_was_top,
+                pair_live=(lane >= t_lane and (lane ^ (1 << (L - 1))) >= t_lane),
+            )
+        rows = rec.rebuild_block_row_through_panel(rows, lY, lT, cp, col0, rs, act)
+
+        # the lane's own bundle rows for panel j: per-level mirrors
+        W_new, Cs_new, Cb_new = bj.W, bj.C_self, bj.C_buddy
+        for s in range(L):
+            src_s = fetch(f"panel{j}.bundle@level{s}", lane ^ (1 << s))
+            W_new = W_new.at[s, lane].set(bj.W[s, src_s])
+            Cs_new = Cs_new.at[s, lane].set(bj.C_buddy[s, src_s])
+            Cb_new = Cb_new.at[s, lane].set(bj.C_self[s, src_s])
+        self.bundles[j] = RecoveryBundle(
+            W=W_new, C_self=Cs_new, C_buddy=Cb_new,
+            Y2=bj.Y2.at[:, lane].set(bj.Y2[:, src_l]),
+            T=bj.T.at[:, lane].set(bj.T[:, src_l]),
+            self_was_top=bj.self_was_top,
+        )
+        return rows
+
+
+def ft_caqr_sweep(
+    A0: jax.Array,
+    comm: SimComm,
+    panel_width: int,
+    schedule: Optional[FailureSchedule] = None,
+) -> FTSweepResult:
+    """Run the full windowed FT-CAQR sweep under a failure schedule.
+
+    Returns ``(R, factors, bundles, events)`` — bit-identical to
+    ``caqr_factorize(A0, comm, panel_width, collect_bundles=True,
+    use_scan=False)`` regardless of the schedule (the paper's recovery
+    guarantee), with one ``RecoveryEvent`` per REBUILD."""
+    return FTSweepDriver(A0, comm, panel_width, schedule).run()

@@ -4,27 +4,65 @@
 ``Detector`` models ULFM semantics: an operation touching a failed lane
 raises ``LaneFailure`` — operations not involving it proceed unknowingly
 (paper §II last paragraph).
+
+Steps are arbitrary hashable addresses. The training loop uses plain int
+step counters; the FT-CAQR sweep driver (``repro.ft.driver``) uses
+``sweep_point(panel, phase, level)`` tuples so a lane can be killed at any
+interruptible point of the factorization:
+
+* ``("leaf")``      — after the panel's local leaf QR, before the first
+                      butterfly level;
+* ``("tsqr", s)``    — after TSQR butterfly level ``s`` completes;
+* ``("trailing", s)``— after trailing-combine level ``s`` completes.
+
+A death *during* a level is detected by the survivors at that level's
+collective and leaves them at the previous level's state, so the
+"after level s, before level s+1" checkpoints cover the full state space of
+the paper's failure model (one address per distinct recoverable state).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Hashable, List, Optional, Set, Tuple
+
+# Interruptible phases of one panel of the CAQR sweep, in execution order.
+PHASE_LEAF = "leaf"
+PHASE_TSQR = "tsqr"
+PHASE_TRAILING = "trailing"
+SWEEP_PHASES = (PHASE_LEAF, PHASE_TSQR, PHASE_TRAILING)
+
+
+def sweep_point(panel: int, phase: str, level: int = 0) -> Tuple[int, str, int]:
+    """Address of an interruptible point in the CAQR sweep (a schedule key).
+
+    ``level`` is the just-completed tree level (ignored for ``leaf``)."""
+    assert phase in SWEEP_PHASES, phase
+    return (panel, phase, 0 if phase == PHASE_LEAF else level)
 
 
 class LaneFailure(RuntimeError):
-    def __init__(self, lane: int, step: int):
+    def __init__(self, lane: int, step: Hashable):
         super().__init__(f"lane {lane} failed at step {step}")
         self.lane = lane
         self.step = step
 
 
+class UnrecoverableFailure(RuntimeError):
+    """Raised when a REBUILD cannot proceed: the single-source buddy that
+    holds the needed artifact is itself dead (e.g. both members of a pair
+    were killed at the same point)."""
+
+
 @dataclasses.dataclass
 class FailureSchedule:
-    """{step: [lanes that die at the start of that step]}"""
+    """{step: [lanes that die at the start of that step]}.
 
-    events: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    Keys are ints for the training loop, ``sweep_point(...)`` tuples for the
+    CAQR sweep driver."""
 
-    def lanes_failing_at(self, step: int) -> List[int]:
+    events: Dict[Hashable, List[int]] = dataclasses.field(default_factory=dict)
+
+    def lanes_failing_at(self, step: Hashable) -> List[int]:
         return self.events.get(step, [])
 
 
@@ -33,9 +71,9 @@ class Detector:
         self.n = n_lanes
         self.schedule = schedule or FailureSchedule()
         self.dead: Set[int] = set()
-        self.fired: Set[Tuple[int, int]] = set()
+        self.fired: Set[Tuple[Hashable, int]] = set()
 
-    def begin_step(self, step: int) -> List[int]:
+    def begin_step(self, step: Hashable) -> List[int]:
         """Kill scheduled lanes; return the newly dead (detection event).
         Each scheduled (step, lane) event fires exactly once — a REBUILD
         replay passing the same step does not re-kill the respawned lane."""
@@ -47,7 +85,7 @@ class Detector:
         self.dead.update(newly)
         return newly
 
-    def check(self, lanes: Tuple[int, ...], step: int) -> None:
+    def check(self, lanes: Tuple[int, ...], step: Hashable) -> None:
         """An operation involving these lanes: raises on the first dead one."""
         for l in lanes:
             if l in self.dead:

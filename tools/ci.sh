@@ -1,15 +1,20 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 tests + benchmark smoke.
+# CI entrypoint: docs check + tier-1 tests + example smoke + benchmark smoke.
 #
-#   tools/ci.sh          tier-1 pytest (slow-marked tests excluded by
-#                        pytest.ini) + `benchmarks/run.py --quick`, which
-#                        also refreshes BENCH_core.json
+#   tools/ci.sh          docs check (tools/check_docs.py), tier-1 pytest
+#                        (slow-marked tests excluded by pytest.ini),
+#                        end-to-end example smoke (quickstart + the FT
+#                        driver/training demo), then `benchmarks/run.py
+#                        --quick`, which also refreshes BENCH_core.json
 #   tools/ci.sh --slow   additionally run the slow-marked tests
-#                        (subprocess SPMD cells; need a newer jax)
+#                        (subprocess SPMD cells + exhaustive kill matrices)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== docs check =="
+python tools/check_docs.py
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -18,6 +23,10 @@ if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow tests =="
     python -m pytest -q -m slow
 fi
+
+echo "== example smoke =="
+python examples/quickstart.py
+python examples/failure_recovery_training.py --steps 8
 
 echo "== benchmark smoke (writes BENCH_core.json) =="
 python -m benchmarks.run --quick
