@@ -60,8 +60,19 @@ def main() -> None:
         pt = "-".join(str(x) for x in row["point"])
         print(f"{pt},{row['us_rebuild']:.0f},{row['fetches']},{row['sources']}")
 
+    general = bench_core.bench_general_shapes(quick=args.quick)
+    print()
+    print("# general shapes: ragged (zero-padded) vs aligned sweep, same padded compute")
+    print(f"# aligned {tuple(general['aligned']['shape'])}: "
+          f"{general['aligned']['us']:.0f}us; "
+          f"ragged {tuple(general['ragged']['shape'])} -> padded "
+          f"{tuple(general['ragged']['padded_shape'])}: "
+          f"{general['ragged']['us']:.0f}us; "
+          f"overhead {general['overhead']:.2f}x")
+
     record = {"schema": 1, "quick": args.quick, "rows": rows,
-              "sweep_cost": sweep, "recovery": recovery}
+              "sweep_cost": sweep, "recovery": recovery,
+              "general_shapes": general}
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")

@@ -44,12 +44,17 @@ from repro.core.trailing import (
 from repro.core.caqr import (
     CAQRResult,
     PanelFactors,
+    SweepGeometry,
     assemble_R,
     caqr_apply_qt,
+    caqr_apply_qt_batched,
     caqr_factorize,
+    caqr_factorize_batched,
     caqr_factorize_spmd,
     lane_geometry,
+    pad_to_geometry,
     panel_geometry,
+    sweep_geometry,
 )
 from repro.core import lstsq, recovery
 
@@ -61,7 +66,9 @@ __all__ = [
     "ft_tsqr_level", "ft_tsqr_q", "local_tsqr", "local_tsqr_q",
     "tsqr_orthonormalize", "RecoveryBundle", "TrailingLevelStep",
     "trailing_combine_level", "trailing_update_baseline",
-    "trailing_update_ft", "CAQRResult", "PanelFactors", "assemble_R",
-    "caqr_apply_qt", "caqr_factorize", "caqr_factorize_spmd",
-    "lane_geometry", "panel_geometry", "recovery", "lstsq",
+    "trailing_update_ft", "CAQRResult", "PanelFactors", "SweepGeometry",
+    "assemble_R", "caqr_apply_qt", "caqr_apply_qt_batched",
+    "caqr_factorize", "caqr_factorize_batched", "caqr_factorize_spmd",
+    "lane_geometry", "pad_to_geometry", "panel_geometry", "sweep_geometry",
+    "recovery", "lstsq",
 ]

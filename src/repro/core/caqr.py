@@ -2,15 +2,30 @@
 
 1-D block-row layout, exactly the paper's setting: lane ``i`` owns rows
 ``[i*m_loc, (i+1)*m_loc)`` of an ``(P*m_loc, n)`` matrix. The factorization
-sweeps ``n/b`` panels left to right; each panel is factorized by FT-TSQR
-(§III-B) and the trailing matrix updated by Algorithm 2 (§III-C).
+sweeps panels left to right; each panel is factorized by FT-TSQR (§III-B)
+and the trailing matrix updated by Algorithm 2 (§III-C).
 
 Sweep bookkeeping the paper elides (it presents single-panel trees): the tree
 of panel ``k`` is oriented so its root — the lane where the new R rows
 deposit — is the owner of global rows ``[k*b, (k+1)*b)``. Lanes whose rows
 are fully consumed contribute zero leaves and pass-through combines (encoded
 as zeroed (Y2, T) factors), so the trailing update inherits the masking with
-no extra logic. Requires ``m_loc % b == 0`` and ``n % b == 0``.
+no extra logic.
+
+General shapes (the paper's title): arbitrary ``m x n`` float matrices are
+accepted. ``sweep_geometry`` computes the *static* padded geometry — per-lane
+rows rounded up to a multiple of ``b`` (so every panel's diagonal block lives
+whole inside one lane) and a ragged last panel rounded up to width ``b`` —
+and the sweep runs on the zero-padded working array. This is the
+``kernels/ops.py`` alignment contract applied at the core layer: zero
+rows/columns are exact for every op in this family (they yield degenerate
+reflectors with ``tau = 0`` and contribute nothing to any inner product), so
+``R`` of the padded sweep is the ``R`` of the original matrix. Wide matrices
+(``n > m``) factorize only the left ``min(m, n)`` columns into panels; the
+remaining columns ride along in every trailing update and finish as the
+``R2`` block of ``A = Q [R1 R2]``. Aligned shapes skip the padding entirely
+and run the exact seed code path (bit-identical — regression-gated by
+``tests/test_general_shapes.py``).
 
 Because row permutations do not change the R factor, the final R here equals
 (up to row signs) the R of any standard QR — validated against
@@ -48,9 +63,67 @@ class PanelFactors(NamedTuple):
 
 
 class CAQRResult(NamedTuple):
-    R: jax.Array                      # (n, n) upper triangular, replicated
+    R: jax.Array                      # (min(m, n), n) upper trapezoidal,
+                                      # replicated ([R1 R2] when m < n)
     factors: PanelFactors             # stacked over panels (leading axis)
     bundles: Optional[RecoveryBundle]  # stacked over panels, if requested
+
+
+class SweepGeometry(NamedTuple):
+    """Static geometry of a general-shape sweep (all Python ints).
+
+    The sweep itself always runs at the *padded* shape ``(P*m_loc_pad,
+    n_work)``: ``m_loc_pad`` is ``m_loc`` rounded up to a multiple of ``b``
+    (>= b), so every panel's b diagonal rows live whole inside one lane and
+    ``row_start`` clipping never engages; ``n_work`` rounds a ragged last
+    panel up to width ``b``. Padding is with zeros — exact for every op in
+    this family (see module docstring). ``n_panels`` covers only the left
+    ``min(m, n)`` columns; for wide matrices the remaining columns are
+    trailing-only riders (the ``R2`` block). ``k`` = ``min(m, n)`` is the
+    row count of the returned R (rows beyond ``k`` in the padded assembly
+    are rank-overshoot roundoff and are sliced away).
+    """
+
+    P: int
+    b: int
+    m_loc: int       # caller's per-lane rows
+    n: int           # caller's columns
+    m_loc_pad: int   # per-lane rows the sweep runs at (multiple of b, >= b)
+    n_work: int      # column width the sweep runs at (>= n_panels * b)
+    n_panels: int
+    k: int           # min(P*m_loc, n): rows of the returned R
+
+    @property
+    def aligned(self) -> bool:
+        """True iff no padding is needed (the seed-exact fast path)."""
+        return self.m_loc_pad == self.m_loc and self.n_work == self.n
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def sweep_geometry(P: int, m_loc: int, n: int, b: int) -> SweepGeometry:
+    """Padded sweep geometry for a general ``(P*m_loc) x n`` factorization."""
+    assert m_loc >= 1 and n >= 1 and b >= 1, (m_loc, n, b)
+    m_loc_pad = _ceil_to(m_loc, b)
+    k = min(P * m_loc, n)
+    n_panels = -(-k // b)
+    n_work = max(n, n_panels * b)
+    # P*m_loc_pad is a multiple of b and >= k, so the panel region fits.
+    assert n_panels * b <= P * m_loc_pad
+    return SweepGeometry(P=P, b=b, m_loc=m_loc, n=n, m_loc_pad=m_loc_pad,
+                         n_work=n_work, n_panels=n_panels, k=k)
+
+
+def pad_to_geometry(comm, A_local: jax.Array, geom: SweepGeometry) -> jax.Array:
+    """Zero-pad each lane's block to the sweep's working shape (a no-op — the
+    same array object — when the geometry is aligned)."""
+    dr = geom.m_loc_pad - geom.m_loc
+    dc = geom.n_work - geom.n
+    if dr == 0 and dc == 0:
+        return A_local
+    return comm.map_local(lambda A: jnp.pad(A, ((0, dr), (0, dc))))(A_local)
 
 
 def panel_geometry(comm, k: int, b: int, m_loc: int):
@@ -84,14 +157,19 @@ def lane_geometry(k: int, b: int, m_loc: int, lane: int):
     return col0, col0 // m_loc, row_start, active
 
 
-def assemble_R(comm, R_rows: jax.Array, n: int) -> jax.Array:
-    """Stack per-panel replicated R row-blocks (n_panels, [P,] b, n) into the
-    upper-triangular R (shared by the sweep and the FT driver)."""
+def assemble_R(comm, R_rows: jax.Array, geom: SweepGeometry) -> jax.Array:
+    """Stack per-panel replicated R row-blocks (n_panels, [P,] b, n_work)
+    into the (k, n) upper-trapezoidal R (shared by the sweep and the FT
+    driver). Rows beyond ``geom.k`` (rank overshoot of a padded or wide
+    sweep) and zero-padded columns are sliced away; on aligned geometry both
+    slices are no-ops and the assembly is bit-identical to the seed's."""
     P = comm.axis_size()
+    rows = geom.n_panels * geom.b
     if isinstance(comm, SimComm):
-        R = R_rows.swapaxes(0, 1).reshape(P, n, n)
-        return jnp.triu(R)
-    return jnp.triu(R_rows.reshape(n, n))
+        R = R_rows.swapaxes(0, 1).reshape(P, rows, geom.n_work)
+        return jnp.triu(R)[:, :geom.k, :geom.n]
+    R = jnp.triu(R_rows.reshape(rows, geom.n_work))
+    return R[:geom.k, :geom.n]
 
 
 def advance_columns(comm, A_cur: jax.Array, window_next: jax.Array, col0: int):
@@ -260,12 +338,19 @@ def caqr_factorize(
     use_scan: bool = True,
     windowed: Optional[bool] = None,
 ) -> CAQRResult:
-    """FT-CAQR sweep. Returns replicated R plus implicit-Q panel factors.
+    """FT-CAQR sweep of a general matrix. Returns replicated R plus
+    implicit-Q panel factors.
 
-    A_local: (m_loc, n) per lane (SimComm: (P, m_loc, n)).
-    panel_width: b; requires m_loc % b == 0, n % b == 0, n <= P*m_loc.
+    A_local: (m_loc, n) per lane (SimComm: (P, m_loc, n)). Any ``m x n``
+        float shape is accepted — tall, wide, ragged (``n % b != 0``) and
+        unaligned (``m_loc % b != 0``): the sweep runs at the zero-padded
+        ``sweep_geometry`` shape (exact; see module docstring) and the
+        returned R is ``(min(m, n), n)`` — square upper triangular when
+        tall, ``[R1 R2]`` when wide. Factors and bundles live at the padded
+        geometry (``caqr_apply_qt`` pads conforming inputs itself).
+    panel_width: b.
     use_scan: True = lax.scan over panels (uniform per-iteration shapes,
-        compile-time friendly; the trailing update spans all n columns every
+        compile-time friendly; the trailing update spans all columns every
         panel). False = statically unrolled sweep — the performance variant.
     windowed: restrict panel k's trailing update to the live window
         ``A[:, k*b:]`` with *static* column slices, halving the sweep's
@@ -276,26 +361,26 @@ def caqr_factorize(
     b = panel_width
     m_loc, n = comm.local_shape(A_local)
     P = comm.axis_size()
-    assert m_loc % b == 0 and n % b == 0, (m_loc, n, b)
-    assert n <= P * m_loc, "matrix must have at least as many rows as columns"
+    geom = sweep_geometry(P, m_loc, n, b)
+    A_work = pad_to_geometry(comm, A_local, geom)
     if windowed is None:
         windowed = not use_scan
     assert not (windowed and use_scan), \
         "the windowed sweep needs static column slices (use_scan=False)"
-    n_panels = n // b
+    n_panels, n_work = geom.n_panels, geom.n_work
 
     ks = jnp.arange(n_panels)
     if use_scan:
         body = _panel_step(comm, b, collect_bundles)
-        _, (factors, R_rows, bundles) = jax.lax.scan(body, A_local, ks)
+        _, (factors, R_rows, bundles) = jax.lax.scan(body, A_work, ks)
     else:
         outs = []
-        A_cur = A_local
+        A_cur = A_work
         body = None if windowed else _panel_step(comm, b, collect_bundles)
         for k in range(n_panels):
             if windowed:
                 A_cur, out = _panel_step_windowed(
-                    comm, b, collect_bundles, k, n
+                    comm, b, collect_bundles, k, n_work
                 )(A_cur)
             else:
                 A_cur, out = body(A_cur, jnp.asarray(k))
@@ -308,8 +393,8 @@ def caqr_factorize(
             else None
         )
 
-    # R_rows: (n_panels, b, n) replicated (SimComm: (n_panels, P, b, n)).
-    R = assemble_R(comm, R_rows, n)
+    # R_rows: (n_panels, b, n_work) replicated (SimComm: (n_panels, P, b, n_work)).
+    R = assemble_R(comm, R_rows, geom)
     return CAQRResult(R=R, factors=factors, bundles=bundles)
 
 
@@ -324,8 +409,22 @@ def caqr_apply_qt(
     Replays every panel's leaf WY + tree combine against B. For B = A this
     reproduces [R; 0] (up to the sweep's row bookkeeping) — the strongest
     internal consistency check of the stored factors.
+
+    The factors of an unaligned factorization live at the padded
+    ``sweep_geometry`` (see module docstring): B is zero-row-padded here to
+    conform, and the result keeps the padded layout — R-row deposits of a
+    ragged sweep land on pad-row positions, so slicing them off would lose
+    them (``lstsq.caqr_lstsq`` collects deposits from exactly this layout).
+    Aligned factors leave B untouched.
     """
     n_panels = jax.tree_util.tree_leaves(factors)[0].shape[0]
+    m_fac = factors.leaf_Y.shape[-2]  # the factors' (padded) per-lane rows
+    m_b = comm.local_shape(B_local)[0]
+    if m_b != m_fac:
+        assert m_b < m_fac, (m_b, m_fac)
+        B_local = comm.map_local(
+            lambda x: jnp.pad(x, ((0, m_fac - m_b), (0, 0)))
+        )(B_local)
 
     def body(B_cur, pf: PanelFactors):
         dist = DistTSQRFactors(
@@ -346,6 +445,36 @@ def caqr_apply_qt(
             pf = jax.tree_util.tree_map(lambda x: x[k], factors)
             B_out, _ = body(B_out, pf)
     return B_out
+
+
+# Batched (vmap) front-end ---------------------------------------------------
+
+
+def caqr_factorize_batched(
+    A_batch: jax.Array, comm, panel_width: int, **kw
+) -> CAQRResult:
+    """Factorize a stack of independent same-shape problems in one call.
+
+    A_batch carries a leading batch axis over ``caqr_factorize``'s layout:
+    (batch, P, m_loc, n) under SimComm, (batch, m_loc, n) per lane under
+    AxisComm. The whole sweep (any geometry — ragged, wide, scan or
+    windowed) is ``jax.vmap``-ed, so the batch shares one compiled program;
+    every field of the returned ``CAQRResult`` gains the leading batch axis.
+    """
+    return jax.vmap(
+        lambda A: caqr_factorize(A, comm, panel_width, **kw)
+    )(A_batch)
+
+
+def caqr_apply_qt_batched(
+    B_batch: jax.Array, factors: PanelFactors, comm, **kw
+) -> jax.Array:
+    """Batched companion of ``caqr_apply_qt``: replays a stack of
+    factorizations (from ``caqr_factorize_batched``) against a conforming
+    stack of right-hand sides."""
+    return jax.vmap(
+        lambda B, f: caqr_apply_qt(B, f, comm, **kw)
+    )(B_batch, factors)
 
 
 # SPMD wrapper ---------------------------------------------------------------

@@ -1,55 +1,93 @@
 """Least-squares on top of FT-CAQR: min ||Ax - b||.
 
-x = R^{-1} (Q^T b)[:n] — the implicit Q^T is replayed from the stored panel
-factors (the same machinery the trailing update uses), so the solve inherits
-the factorization's fault tolerance: a lane lost during the apply is
-recoverable from its buddy's bundle exactly as in the factorization.
+x = R1^{-1} (Q^T b)[:k], k = min(m, n) — the implicit Q^T is replayed from
+the stored panel factors (the same machinery the trailing update uses), so
+the solve inherits the factorization's fault tolerance: a lane lost during
+the apply is recoverable from its buddy's bundle exactly as in the
+factorization.
+
+General shapes follow the factorization's ``sweep_geometry``:
+
+* tall/ragged (m >= n): the unique least-squares solution (A full rank).
+* wide (m < n, A = Q [R1 R2]): the *basic* solution — ``x = [x1; 0]`` with
+  ``R1 x1 = (Q^T b)[:m]``. For a full-row-rank A this solves ``A x = b``
+  exactly (zero residual), but it is NOT the minimum-norm solution (that
+  would need a second factorization of A^T / an LQ); the trailing ``n - m``
+  components are pinned to zero. Documented in DESIGN.md §7.
+
+Rank-deficient A is out of contract (the triangular solve would divide by a
+~0 diagonal), matching ``caqr_factorize``'s unpivoted Householder sweep.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.caqr import CAQRResult, caqr_apply_qt, caqr_factorize
+from repro.core.caqr import (
+    CAQRResult,
+    caqr_apply_qt,
+    caqr_factorize,
+    sweep_geometry,
+)
 from repro.core.comm import SimComm
 
 
-def caqr_lstsq(A_local: jax.Array, b_local: jax.Array, comm, panel_width: int):
+def caqr_lstsq(
+    A_local: jax.Array,
+    b_local: jax.Array,
+    comm,
+    panel_width: int,
+    result: Optional[CAQRResult] = None,
+):
     """Solve min ||Ax - b|| for the block-row-distributed (A, b).
 
     A_local: (m_loc, n) per lane; b_local: (m_loc, k). Returns x (n, k),
     replicated (computed from the replicated R and the gathered Q^T b rows).
+
+    ``result``: optional precomputed ``caqr_factorize(A_local, comm,
+    panel_width)`` output — pass it to reuse one factorization across many
+    right-hand sides instead of re-factorizing from scratch per solve.
     """
-    res: CAQRResult = caqr_factorize(A_local, comm, panel_width)
-    Qtb = caqr_apply_qt(b_local, res.factors, comm)
-    # The n rows of Q^T b corresponding to R live at each panel's target
-    # lane's deposit rows — identical bookkeeping to the R collection: they
-    # are the first b rows (per panel) of the virtual result. Re-collect them
-    # exactly as caqr_factorize collected R rows: psum of the target lane's
-    # deposit block per panel. For simplicity we reuse the replay: the
-    # deposits sit at (target lane t, rows [row_start, row_start + b)).
-    m_loc = comm.local_shape(A_local)[0]
-    n = comm.local_shape(A_local)[1]
-    b = panel_width
-    n_panels = n // b
+    m_loc, n = comm.local_shape(A_local)
+    P = comm.axis_size()
+    geom = sweep_geometry(P, m_loc, n, panel_width)
+    if result is None:
+        result = caqr_factorize(A_local, comm, panel_width)
+    assert result.factors.leaf_T.shape[-1] == panel_width, \
+        "precomputed result was factorized at a different panel width"
+    assert result.factors.leaf_Y.shape[-2] == geom.m_loc_pad and \
+        result.R.shape[-2:] == (geom.k, n), \
+        "precomputed result was factorized at a different geometry"
+    Qtb = caqr_apply_qt(b_local, result.factors, comm)  # padded-row layout
+
+    # The k rows of Q^T b pairing with R deposit at each panel's target lane:
+    # R row r lives at lane r // m_loc_pad, local row r % m_loc_pad (padded
+    # geometry guarantees row_start is never clipped, so deposits sit at
+    # their natural padded global row). One vectorized masked scatter per
+    # lane + a single psum collects them all — no per-panel gather loop.
+    K, m_pad = geom.k, geom.m_loc_pad
     idx = comm.axis_index()
 
-    rows = []
-    for kpanel in range(n_panels):
-        t = (kpanel * b) // m_loc
-        rs = kpanel * b - t * m_loc
+    def collect(Q, i):
+        r_global = i * m_pad + jnp.arange(m_pad)
+        in_range = r_global < K
+        vals = jnp.where(in_range[:, None], Q, jnp.zeros_like(Q))
+        out = jnp.zeros((K, Q.shape[-1]), Q.dtype)
+        return out.at[jnp.clip(r_global, 0, K - 1)].add(vals)
 
-        def grab(Q, i):
-            blk = jax.lax.dynamic_slice_in_dim(Q, rs, b, axis=0)
-            return jnp.where(i == t, blk, jnp.zeros_like(blk))
-
-        blk = comm.map_local(grab)(Qtb, idx)
-        rows.append(comm.psum(blk))
+    Qtb_top = comm.psum(comm.map_local(collect)(Qtb, idx))  # (K, rhs)
     if isinstance(comm, SimComm):
-        Qtb_top = jnp.concatenate([r[0] for r in rows], axis=0)  # (n, k)
-        R = res.R[0]
+        Qtb_top = Qtb_top[0]
+        R = result.R[0]
     else:
-        Qtb_top = jnp.concatenate(rows, axis=0)
-        R = res.R
-    x = jax.scipy.linalg.solve_triangular(R, Qtb_top, lower=False)
-    return x
+        R = result.R
+    # R is (K, n): R1 = leading K x K triangle; for wide problems the R2
+    # columns take the basic solution's zero coefficients (see module doc).
+    x1 = jax.scipy.linalg.solve_triangular(R[:, :K], Qtb_top, lower=False)
+    if n > K:
+        x1 = jnp.concatenate(
+            [x1, jnp.zeros((n - K, x1.shape[-1]), x1.dtype)], axis=0
+        )
+    return x1

@@ -169,6 +169,13 @@ def inject_and_recover(
 # routes through the same kernel-dispatch seam as the failure-free path
 # (``householder_qr_masked`` / ``apply_qt`` / ``_combine``), so the rebuilt
 # values are bit-identical to what the dead lane would have computed.
+#
+# Ragged/wide geometry: the driver runs (and re-reads) at the *padded*
+# ``caqr.sweep_geometry`` shape, so every argument here — rows, col0,
+# row_start, panel slices — is already padded-space data. Zero pad
+# rows/columns flow through these formulas exactly like any other rows
+# (they are plain floats that happen to be zero), which is why recovery
+# stays single-source on general shapes with no extra bookkeeping.
 # ---------------------------------------------------------------------------
 
 

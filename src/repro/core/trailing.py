@@ -217,12 +217,25 @@ def trailing_update_ft(
         (see ``_leaf_apply``); bit-identical outputs, fewer flops under
         SPMD. The windowed CAQR sweep sets this.
 
+    Factors built on zero-padded lanes (``ft_tsqr`` with short lanes, or a
+    ragged ``sweep_geometry``) carry more leaf rows than a caller's raw
+    C_local: C is zero-row-padded here to conform, and the *padded* layout
+    is returned — the C' deposit of the tree root may land on pad rows, so
+    slicing them off would lose it. Aligned callers are untouched.
+
     Returns (updated block-row, per-level recovery bundles, final C').
     """
     P = comm.axis_size()
     levels = _levels(P)
     idx = comm.axis_index()
     b = comm.local_shape(factors.R)[-1]
+    m_fac = comm.local_shape(factors.leaf_Y)[0]
+    m_c = comm.local_shape(C_local)[0]
+    if m_c != m_fac:
+        assert m_c < m_fac, (m_c, m_fac)
+        C_local = comm.map_local(
+            lambda x: jnp.pad(x, ((0, m_fac - m_c), (0, 0)))
+        )(C_local)
     if target is None:
         target = jnp.asarray(P - 1)
     if row_start is None:

@@ -65,12 +65,20 @@ class ChainFactors(NamedTuple):
 def local_tsqr(A: jax.Array, tile_rows: int) -> Tuple[ChainFactors, jax.Array]:
     """Sequential TSQR of A (m, b) over row tiles of ``tile_rows`` rows.
 
-    m must be a multiple of tile_rows and tile_rows >= b. Returns the chain
-    factors and the final R (b, b).
+    Requires tile_rows >= b; ``m`` may be ragged (not a multiple of
+    tile_rows): the last tile is zero-padded, which is exact — zero rows
+    yield degenerate reflectors with tau = 0 and contribute nothing to any
+    inner product (the ``kernels/ops.py`` padding contract at the core
+    layer). The chain factors then live at the padded row count
+    (``local_tsqr_q`` produces exact zero rows there; callers slice back).
+    Returns the chain factors and the final R (b, b).
     """
     m, b = A.shape
-    assert m % tile_rows == 0 and tile_rows >= b, (m, b, tile_rows)
-    n_tiles = m // tile_rows
+    assert tile_rows >= b, (m, b, tile_rows)
+    m_pad = -(-m // tile_rows) * tile_rows
+    if m_pad != m:
+        A = jnp.pad(A, ((0, m_pad - m), (0, 0)))
+    n_tiles = m_pad // tile_rows
     tiles = A.reshape(n_tiles, tile_rows, b)
 
     leaf = householder_qr(tiles[0])
@@ -126,9 +134,13 @@ def local_tsqr_q(factors: ChainFactors, tile_rows: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("tile_rows",))
 def tsqr_orthonormalize(A: jax.Array, tile_rows: int) -> Tuple[jax.Array, jax.Array]:
-    """Convenience: thin Q, R of tall-skinny A via the sequential chain."""
+    """Convenience: thin Q, R of tall-skinny A via the sequential chain.
+
+    Ragged ``m`` is supported: the chain pads the last tile with zero rows
+    (exact) and the corresponding all-zero Q rows are sliced back off here.
+    """
     factors, R = local_tsqr(A, tile_rows)
-    return local_tsqr_q(factors, tile_rows), R
+    return local_tsqr_q(factors, tile_rows)[: A.shape[0]], R
 
 
 # ---------------------------------------------------------------------------
@@ -261,6 +273,14 @@ def ft_tsqr(A_local: jax.Array, comm, target: int | None = None) -> DistTSQRFact
     P = comm.axis_size()
     if target is None:
         target = P - 1  # paper convention: odd lane on top at every level
+    m_loc, b = comm.local_shape(A_local)
+    if m_loc < b:
+        # short lanes (fewer local rows than panel columns): zero-pad the
+        # leaf to b rows so the masked QR's R extraction stays in bounds —
+        # exact, and the leaf factors then live at the padded row count.
+        A_local = comm.map_local(
+            lambda x: jnp.pad(x, ((0, b - m_loc), (0, 0)))
+        )(A_local)
     leaf = comm.map_local(householder_qr)(A_local)
     level_Y2, level_T, R = ft_tsqr_combine(comm, leaf.R, jnp.asarray(target))
     return DistTSQRFactors(leaf.Y, leaf.T, level_Y2, level_T, R)
@@ -362,10 +382,15 @@ def dist_orthonormalize(A_local: jax.Array, comm) -> Tuple[jax.Array, jax.Array]
     """Distributed thin-QR orthonormalization: returns (Q_local, R).
 
     R is replicated on every lane (the FT property); Q_local is this lane's
-    row block of the thin Q.
+    row block of the thin Q. Short lanes (m_loc < b) are zero-padded inside
+    ``ft_tsqr``; the pad rows of Q are exactly zero and are sliced back off.
     """
+    m_loc = comm.local_shape(A_local)[0]
     factors = ft_tsqr(A_local, comm)
-    return ft_tsqr_q(factors, comm), factors.R
+    Q = ft_tsqr_q(factors, comm)
+    if comm.local_shape(Q)[0] != m_loc:
+        Q = comm.map_local(lambda q: q[:m_loc])(Q)
+    return Q, factors.R
 
 
 # Convenience SPMD wrappers (call inside shard_map) -------------------------

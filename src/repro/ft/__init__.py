@@ -2,10 +2,16 @@
 and the end-to-end FT-CAQR sweep driver."""
 from repro.ft import driver, elastic, failures, semantics, stragglers
 from repro.ft.driver import FTSweepDriver, FTSweepResult, RecoveryEvent, ft_caqr_sweep
-from repro.ft.failures import FailureSchedule, UnrecoverableFailure, sweep_point
+from repro.ft.failures import (
+    FailureSchedule,
+    UnrecoverableFailure,
+    iter_sweep_points,
+    sweep_point,
+)
 from repro.ft.semantics import Semantics
 __all__ = [
     "driver", "elastic", "failures", "semantics", "stragglers", "Semantics",
     "FTSweepDriver", "FTSweepResult", "RecoveryEvent", "ft_caqr_sweep",
-    "FailureSchedule", "UnrecoverableFailure", "sweep_point",
+    "FailureSchedule", "UnrecoverableFailure", "iter_sweep_points",
+    "sweep_point",
 ]

@@ -69,7 +69,9 @@ from repro.core.caqr import (
     lane_geometry,
     make_panel_factors,
     pad_bundle,
+    pad_to_geometry,
     panel_geometry,
+    sweep_geometry,
 )
 from repro.core.comm import SimComm
 from repro.core.householder import apply_qt, householder_qr_masked
@@ -130,6 +132,12 @@ class FTSweepDriver:
 
     ``A0`` is the initial matrix in SimComm layout ``(P, m_loc, n)`` — it
     doubles as the re-readable data source of the paper's recovery model.
+    Any shape ``caqr_factorize`` accepts is accepted here: the driver runs
+    at the same padded ``sweep_geometry``, and a respawned lane re-reads its
+    *padded* initial slice (re-reading the raw slice and re-padding is the
+    same thing — the pad is static zeros, not lost state), so every REBUILD
+    stays single-source and the outputs stay bit-identical to the
+    failure-free general-shape sweep.
     """
 
     def __init__(
@@ -149,12 +157,13 @@ class FTSweepDriver:
         self.levels = _levels(self.P)
         assert self.levels >= 1, "need at least 2 lanes to tolerate failures"
         self.b = panel_width
-        self.m_loc, self.n = comm.local_shape(A0)
-        assert self.m_loc % self.b == 0 and self.n % self.b == 0
-        assert self.n <= self.P * self.m_loc
-        self.n_panels = self.n // self.b
-        self.A0 = A0
-        self.A = A0
+        m_loc, n = comm.local_shape(A0)
+        self.geom = sweep_geometry(self.P, m_loc, n, self.b)
+        # the sweep (and every REBUILD replay) runs at the padded geometry
+        self.m_loc, self.n = self.geom.m_loc_pad, self.geom.n_work
+        self.n_panels = self.geom.n_panels
+        self.A0 = pad_to_geometry(comm, A0, self.geom)
+        self.A = self.A0
         self.detector = detector or Detector(self.P, schedule)
         # stored sweep outputs, one entry per completed panel
         self.factors: List[PanelFactors] = []
@@ -169,7 +178,7 @@ class FTSweepDriver:
             self._run_panel(k)
         factors = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.factors)
         bundles = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.bundles)
-        R = assemble_R(self.comm, jnp.stack(self.R_rows), self.n)
+        R = assemble_R(self.comm, jnp.stack(self.R_rows), self.geom)
         return FTSweepResult(R=R, factors=factors, bundles=bundles,
                              events=self.events)
 

@@ -40,6 +40,20 @@ def sweep_point(panel: int, phase: str, level: int = 0) -> Tuple[int, str, int]:
     return (panel, phase, 0 if phase == PHASE_LEAF else level)
 
 
+def iter_sweep_points(n_panels: int, levels: int):
+    """All interruptible points of an ``n_panels``-panel sweep over a
+    ``levels``-level tree, in driver execution order — the kill-matrix
+    enumeration (tests, benchmarks). ``n_panels`` comes from the sweep's
+    ``caqr.sweep_geometry`` (``ceil(min(m, n) / b)``), so the enumeration
+    covers ragged and wide geometries exactly as the driver walks them."""
+    for k in range(n_panels):
+        yield sweep_point(k, PHASE_LEAF)
+        for s in range(levels):
+            yield sweep_point(k, PHASE_TSQR, s)
+        for s in range(levels):
+            yield sweep_point(k, PHASE_TRAILING, s)
+
+
 class LaneFailure(RuntimeError):
     def __init__(self, lane: int, step: Hashable):
         super().__init__(f"lane {lane} failed at step {step}")

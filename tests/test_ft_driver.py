@@ -11,11 +11,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import SimComm, caqr_factorize
+from repro.core import SimComm, caqr_factorize, sweep_geometry
 from repro.ft import (
     FailureSchedule,
     UnrecoverableFailure,
     ft_caqr_sweep,
+    iter_sweep_points,
     sweep_point,
 )
 
@@ -50,13 +51,7 @@ def reference():
 
 
 def _all_points(n_panels=N_PANELS, levels=LEVELS):
-    pts = []
-    for k in range(n_panels):
-        pts.append(sweep_point(k, "leaf"))
-        for s in range(levels):
-            pts.append(sweep_point(k, "tsqr", s))
-            pts.append(sweep_point(k, "trailing", s))
-    return pts
+    return list(iter_sweep_points(n_panels, levels))
 
 
 def test_failure_free_driver_matches_windowed_sweep(reference):
@@ -166,6 +161,79 @@ def test_kill_matrix_p8_spot(point, lane):
     ref = caqr_factorize(A, comm, b8, collect_bundles=True, use_scan=False)
     got = ft_caqr_sweep(A, comm, b8, schedule=FailureSchedule(events={point: [lane]}))
     _assert_bit_identical(got, ref)
+
+
+# -- ragged geometry: the general-shape sweep under the same kill matrix ----
+#
+# P=4, m_loc=6, n=10, b=4: unaligned lane heights AND a ragged last panel —
+# the padded sweep_geometry runs at (8, 12) with 3 panels, and every REBUILD
+# (including re-reading the respawned lane's *padded* initial slice) must
+# reproduce the failure-free general-shape sweep bit for bit.
+RP, RM_LOC, RN, RB = 4, 6, 10, 4
+RGEOM = sweep_geometry(RP, RM_LOC, RN, RB)
+assert (RGEOM.m_loc_pad, RGEOM.n_work, RGEOM.n_panels) == (8, 12, 3)
+
+
+@pytest.fixture(scope="module")
+def ragged_reference():
+    A = _matrix(RP, RM_LOC, RN, seed=3)
+    ref = caqr_factorize(A, SimComm(RP), RB, collect_bundles=True,
+                         use_scan=False)
+    return A, ref
+
+
+def test_failure_free_ragged_driver_matches_sweep(ragged_reference):
+    A, ref = ragged_reference
+    got = ft_caqr_sweep(A, SimComm(RP), RB)
+    _assert_bit_identical(got, ref)
+    assert got.events == []
+    assert got.R.shape == (RP, RGEOM.k, RN)
+
+
+@pytest.mark.parametrize("lane", [0, 1, 3])
+@pytest.mark.parametrize("point", [
+    sweep_point(0, "leaf"),
+    sweep_point(0, "trailing", 1),
+    sweep_point(1, "tsqr", 0),
+    sweep_point(2, "trailing", 0),   # ragged last panel, mid-trailing
+    sweep_point(2, "tsqr", 1),       # ragged last panel, deep butterfly
+], ids=lambda p: f"p{p[0]}-{p[1]}{p[2]}")
+def test_kill_matrix_ragged_spot(ragged_reference, point, lane):
+    """Ragged-geometry spot kills (tier-1): single-source REBUILD over
+    padded panels, bit-identical to the failure-free general-shape sweep."""
+    A, ref = ragged_reference
+    sched = FailureSchedule(events={point: [lane]})
+    got = ft_caqr_sweep(A, SimComm(RP), RB, schedule=sched)
+    _assert_bit_identical(got, ref)
+    (event,) = got.events
+    assert event.point == point and event.lane == lane
+    assert all(src != lane for src in event.reads.values())
+
+
+def test_kill_matrix_wide_spot():
+    """Wide geometry (n > P*m_loc): the trailing-only R2 columns survive a
+    mid-sweep death and REBUILD bit-identically too."""
+    Pw, mw, nw, bw = 4, 4, 24, 4
+    A = _matrix(Pw, mw, nw, seed=4)
+    comm = SimComm(Pw)
+    ref = caqr_factorize(A, comm, bw, collect_bundles=True, use_scan=False)
+    sched = FailureSchedule(events={sweep_point(2, "trailing", 1): [2]})
+    got = ft_caqr_sweep(A, comm, bw, schedule=sched)
+    _assert_bit_identical(got, ref)
+    assert got.R.shape == (Pw, Pw * mw, nw)  # [R1 R2]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lane", range(RP))
+def test_kill_matrix_ragged_exhaustive(ragged_reference, lane):
+    """Every lane x every phase/level x every (padded) panel of the ragged
+    geometry (slow tier)."""
+    A, ref = ragged_reference
+    for pt in iter_sweep_points(RGEOM.n_panels, LEVELS):
+        got = ft_caqr_sweep(
+            A, SimComm(RP), RB, schedule=FailureSchedule(events={pt: [lane]})
+        )
+        _assert_bit_identical(got, ref)
 
 
 @pytest.mark.slow

@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import SimComm
+from repro.core import SimComm, caqr_factorize
 from repro.core.lstsq import caqr_lstsq
 from repro.ft.stragglers import StragglerConfig, StragglerMonitor, StragglerPolicy
 
@@ -30,6 +30,57 @@ def test_caqr_lstsq_exact_on_consistent_system(rng):
         SimComm(P), b,
     )
     np.testing.assert_allclose(np.asarray(x), x_true, rtol=5e-3, atol=5e-3)
+
+
+def test_caqr_lstsq_reuses_precomputed_factorization(rng):
+    """Passing a precomputed CAQRResult skips the re-factorization and gives
+    the bit-identical solve (one factorization, many right-hand sides)."""
+    P, m_loc, n, b = 4, 16, 32, 4
+    comm = SimComm(P)
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+    res = caqr_factorize(A, comm, b)
+    for k in range(2):
+        bvec = jnp.asarray(rng.standard_normal((P, m_loc, 2)), jnp.float32)
+        x_fresh = caqr_lstsq(A, bvec, comm, b)
+        x_reuse = caqr_lstsq(A, bvec, comm, b, result=res)
+        assert np.array_equal(np.asarray(x_fresh), np.asarray(x_reuse))
+
+
+def test_caqr_lstsq_ragged_matches_numpy(rng):
+    """Unaligned lanes + ragged last panel (the sweep_geometry path)."""
+    P, m_loc, n, b = 4, 6, 10, 4
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+    bvec = jnp.asarray(rng.standard_normal((P, m_loc, 3)), jnp.float32)
+    x = caqr_lstsq(A, bvec, SimComm(P), b)
+    x_ref, *_ = np.linalg.lstsq(
+        np.asarray(A).reshape(-1, n), np.asarray(bvec).reshape(-1, 3),
+        rcond=None,
+    )
+    np.testing.assert_allclose(np.asarray(x), x_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_caqr_lstsq_wide_basic_solution(rng):
+    """Wide system (n > m): caqr_lstsq returns the *basic* solution of
+    A = Q [R1 R2] — exact on a consistent system, trailing n-m components
+    pinned to zero. This is deliberately NOT the minimum-norm solution
+    (that needs a factorization of A^T); documented in lstsq.py/DESIGN.md."""
+    P, m_loc, n, b = 2, 4, 12, 4
+    m = P * m_loc
+    x_true = rng.standard_normal((n, 2)).astype(np.float32)
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    bvec = A @ x_true
+    x = np.asarray(caqr_lstsq(
+        jnp.asarray(A.reshape(P, m_loc, n)),
+        jnp.asarray(bvec.reshape(P, m_loc, 2)),
+        SimComm(P), b,
+    ))
+    assert x.shape == (n, 2)
+    assert np.all(x[m:] == 0)  # basic solution: free components zeroed
+    np.testing.assert_allclose(A @ x, bvec, rtol=0,
+                               atol=5e-4 * np.abs(bvec).max())
+    # the minimum-norm solution is strictly shorter — the documented gap
+    x_mn, *_ = np.linalg.lstsq(A, bvec, rcond=None)
+    assert np.linalg.norm(x_mn) <= np.linalg.norm(x) + 1e-4
 
 
 def test_straggler_detection_and_rebalance():

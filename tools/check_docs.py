@@ -22,6 +22,16 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "DESIGN.md"]
 
+# Load-bearing sections: documentation a refactor must keep (referenced from
+# code docstrings and tests). A heading rename/removal fails the gate.
+REQUIRED_HEADINGS = {
+    "README.md": ["## Shape support"],
+    "DESIGN.md": [
+        "## 5. Recovery data-flow",
+        "## 7. Ragged-panel geometry and padding semantics",
+    ],
+}
+
 FILE_RE = re.compile(r"`([A-Za-z0-9_\-./]+\.(?:py|sh|json|md))`")
 MODULE_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
 
@@ -57,6 +67,9 @@ def main() -> int:
         for tok in sorted(set(MODULE_RE.findall(text))):
             if not module_ok(tok):
                 missing.append((doc, tok))
+        for heading in REQUIRED_HEADINGS.get(doc, []):
+            if not any(line.startswith(heading) for line in text.splitlines()):
+                missing.append((doc, f"required section {heading!r}"))
     if missing:
         print("dangling documentation references:")
         for doc, tok in missing:

@@ -1,17 +1,42 @@
 #!/usr/bin/env bash
 # CI entrypoint: docs check + tier-1 tests + example smoke + benchmark smoke.
 #
-#   tools/ci.sh          docs check (tools/check_docs.py), tier-1 pytest
-#                        (slow-marked tests excluded by pytest.ini),
+# Test tiers (see also pytest.ini):
+#   tier-1     the bare `python -m pytest -x -q` — deterministic tests only,
+#              slow-marked tests excluded; must pass on a bare image.
+#   slow       `-m slow`: subprocess SPMD cells + exhaustive kill matrices
+#              (aligned AND ragged geometries); run via `tools/ci.sh --slow`.
+#   property   the hypothesis-driven differential harnesses
+#              (tests/test_general_shapes.py, tests/test_properties.py).
+#              They run inside tier-1 whenever hypothesis is importable; the
+#              guard below makes a missing hypothesis a LOUD failure instead
+#              of a silent skip, so the property tier cannot quietly vanish
+#              from CI. Set CI_ALLOW_MISSING_HYPOTHESIS=1 to acknowledge an
+#              image without it (the deterministic tiers still run).
+#
+#   tools/ci.sh          docs check (tools/check_docs.py), tier-1 pytest,
 #                        end-to-end example smoke (quickstart + the FT
 #                        driver/training demo), then `benchmarks/run.py
 #                        --quick`, which also refreshes BENCH_core.json
 #   tools/ci.sh --slow   additionally run the slow-marked tests
-#                        (subprocess SPMD cells + exhaustive kill matrices)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== property-tier dependency check =="
+if python -c "import hypothesis" 2>/dev/null; then
+    echo "hypothesis present: property harnesses run in tier-1"
+else
+    echo "ERROR: hypothesis is not installed — the property tier" >&2
+    echo "(tests/test_general_shapes.py, tests/test_properties.py)" >&2
+    echo "would be silently skipped. Install hypothesis, or set" >&2
+    echo "CI_ALLOW_MISSING_HYPOTHESIS=1 to acknowledge the gap." >&2
+    if [[ "${CI_ALLOW_MISSING_HYPOTHESIS:-0}" != "1" ]]; then
+        exit 1
+    fi
+    echo "CI_ALLOW_MISSING_HYPOTHESIS=1 set: continuing without the property tier"
+fi
 
 echo "== docs check =="
 python tools/check_docs.py
