@@ -1,0 +1,117 @@
+"""SPMD-path benchmark: SimComm vs shard_map FT sweep + REBUILD cost.
+
+The production path needs a multi-device platform, and jax locks the device
+count at first init — so the measurement runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=P`` and reports JSON on
+stdout; this module spawns it and folds the result into the ``spmd``
+section of ``BENCH_core.json``.
+
+What is measured (per geometry):
+
+* ``us_simcomm_sweep``  — eager SimComm ``ft_caqr_sweep`` wall time (the
+  simulator's level-stepped dispatch, what tests pay);
+* ``us_spmd_sweep``     — one post-compile call of the jitted shard_map
+  sweep (the production execution: whole sweep one program);
+* ``s_spmd_compile``    — trace+compile time of that program (paid once);
+* ``us_spmd_rebuild_delta`` — extra per-call time of the same compiled
+  sweep with one mid-sweep kill + REBUILD traced in, vs failure-free: the
+  SPMD REBUILD cost (the paper's recovery-overhead claim on the real path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import Dict
+
+_SUBPROCESS = """
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import AxisComm, SimComm
+    from repro.dist import compat
+    from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+    from repro.ft.driver import FTSweepDriver
+    from repro.launch.spmd_qr import ft_caqr_sweep_spmd, make_lane_mesh
+
+    P_, m_loc, n, b, reps = {P}, {m_loc}, {n}, {b}, {reps}
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((P_ * m_loc, n)), jnp.float32)
+    A_sim = A.reshape(P_, m_loc, n)
+    mesh = make_lane_mesh(P_)
+    kill = FailureSchedule(
+        events={{sweep_point(1, "trailing", 0): [P_ - 1]}})
+
+    def timed_spmd(sched):
+        # build the compiled whole-sweep program once (the wrapper re-jits
+        # per call so events stay fresh; here we time the compiled function)
+        def body(A_local):
+            res = FTSweepDriver(
+                A_local, AxisComm("qr"), b, sched).run()
+            return res.R
+        mapped = compat.shard_map(
+            body, mesh, in_specs=P("qr", None), out_specs=P(None))
+        t0 = time.perf_counter()
+        with compat.set_mesh(mesh):
+            fn = jax.jit(mapped)
+            fn(A).block_until_ready()
+            compile_s = time.perf_counter() - t0
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                fn(A).block_until_ready()
+                times.append(time.perf_counter() - t0)
+        # median: the REBUILD delta is small vs whole-sweep jitter
+        times.sort()
+        return compile_s, times[len(times) // 2] * 1e6
+
+    # eager SimComm sweep (warm once for kernel jits)
+    ft_caqr_sweep(A_sim, SimComm(P_), b).R.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ft_caqr_sweep(A_sim, SimComm(P_), b).R.block_until_ready()
+    us_sim = (time.perf_counter() - t0) / reps * 1e6
+
+    compile_free, us_free = timed_spmd(None)
+    compile_kill, us_kill = timed_spmd(kill)
+
+    print("BENCH_JSON " + json.dumps({{
+        "P": P_, "m_loc": m_loc, "n": n, "b": b, "reps": reps,
+        "us_simcomm_sweep": us_sim,
+        "us_spmd_sweep": us_free,
+        "s_spmd_compile": compile_free,
+        "us_spmd_sweep_with_rebuild": us_kill,
+        "us_spmd_rebuild_delta": us_kill - us_free,
+        "s_spmd_compile_with_rebuild": compile_kill,
+    }}))
+"""
+
+
+def suite(quick: bool = False) -> Dict:
+    """Run the SPMD benchmark subprocess; returns the ``spmd`` record."""
+    P, m_loc, n, b, reps = (4, 16, 32, 4, 15) if quick else (4, 32, 64, 8, 25)
+    code = textwrap.dedent(_SUBPROCESS).format(
+        P=P, m_loc=m_loc, n=n, b=b, reps=reps)
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={P}",
+           "PYTHONPATH": "src"}
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=1800,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"spmd benchmark subprocess failed:\n{r.stdout}\n{r.stderr}")
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            rec = json.loads(line[len("BENCH_JSON "):])
+            rec["quick"] = quick
+            return rec
+    raise RuntimeError(f"no BENCH_JSON line in output:\n{r.stdout}")
+
+
+if __name__ == "__main__":
+    print(json.dumps(suite(quick="--quick" in sys.argv), indent=1))

@@ -70,9 +70,20 @@ def main() -> None:
           f"{general['ragged']['us']:.0f}us; "
           f"overhead {general['overhead']:.2f}x")
 
+    from benchmarks import bench_spmd
+
+    spmd = bench_spmd.suite(quick=args.quick)
+    print()
+    print("# SPMD path (shard_map over a forced host-device mesh) vs SimComm")
+    print(f"# P={spmd['P']} m_loc={spmd['m_loc']} n={spmd['n']} b={spmd['b']}: "
+          f"SimComm {spmd['us_simcomm_sweep']:.0f}us/sweep (eager), "
+          f"shard_map {spmd['us_spmd_sweep']:.0f}us/sweep "
+          f"(+{spmd['s_spmd_compile']:.1f}s compile); "
+          f"1-kill REBUILD adds {spmd['us_spmd_rebuild_delta']:.0f}us/sweep")
+
     record = {"schema": 1, "quick": args.quick, "rows": rows,
               "sweep_cost": sweep, "recovery": recovery,
-              "general_shapes": general}
+              "general_shapes": general, "spmd": spmd}
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")

@@ -19,6 +19,16 @@ Rules for code written against Comm:
   * use ``comm.where(cond, a, b)`` for lane-dependent selects;
   * wrap per-lane subroutines in ``comm.map_local(fn)``;
   * shapes of local arrays via ``comm.local_shape(x)``.
+
+Death-mask primitives (the FT seam; contract in DESIGN.md §8):
+``where_lane`` / ``poison`` / ``fetch_lane`` express process
+death and single-source REBUILD as *masked selects keyed by static lane
+indices*, so the FT driver (``repro.ft.driver``) is one program that runs on
+both comms. Lane arguments are Python ints (failure schedules are static
+data); under AxisComm each primitive is a collective the whole axis enters,
+under SimComm it is indexing on the lane axis. ``lane_axis`` names which
+axis of a SimComm array is the lane axis (stored level-stacked state carries
+it at position 1); AxisComm ignores it — local arrays carry no lane axis.
 """
 from __future__ import annotations
 
@@ -35,7 +45,11 @@ class AxisComm:
         self.axis_name = axis_name
 
     def axis_size(self) -> int:
-        return jax.lax.axis_size(self.axis_name)
+        if hasattr(jax.lax, "axis_size"):
+            return jax.lax.axis_size(self.axis_name)
+        # legacy jax: psum of a Python 1 over a named axis constant-folds
+        # to the axis size as a Python int
+        return jax.lax.psum(1, self.axis_name)
 
     def axis_index(self):
         return jax.lax.axis_index(self.axis_name)
@@ -54,6 +68,31 @@ class AxisComm:
 
     def local_shape(self, x) -> Tuple[int, ...]:
         return tuple(x.shape)
+
+    # -- death-mask primitives (DESIGN.md §8) -------------------------------
+
+    def where_lane(self, lane: int, a, b, lane_axis: int = 0):
+        """Lane ``lane`` sees ``a``; every other lane sees ``b``. A pure
+        select — no communication. ``lane_axis`` is ignored: SPMD-local
+        arrays carry no lane axis."""
+        del lane_axis
+        return jnp.where(self.axis_index() == lane, a, b)
+
+    def poison(self, x, lane: int, lane_axis: int = 0):
+        """Mask-based process death: NaN lane ``lane``'s value (float leaves
+        only — int/bool bookkeeping is static data a respawn recomputes)."""
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return self.where_lane(lane, jnp.full_like(x, jnp.nan), x, lane_axis)
+
+    def fetch_lane(self, x, dst: int, src: int, lane_axis: int = 0, into=None):
+        """Single-source REBUILD fetch: lane ``dst``'s slot of ``into``
+        (default ``x``) becomes lane ``src``'s value of ``x``; every other
+        lane keeps ``into``. One point-to-point collective-permute — only
+        ``src`` sends, only ``dst``'s result changes."""
+        into = x if into is None else into
+        got = self.ppermute(x, [(src, dst)])
+        return self.where_lane(dst, got, into, lane_axis)
 
 
 class SimComm:
@@ -93,3 +132,35 @@ class SimComm:
 
     def local_shape(self, x) -> Tuple[int, ...]:
         return tuple(x.shape)[1:]
+
+    # -- death-mask primitives (DESIGN.md §8) -------------------------------
+
+    def _lane_index(self, lane: int, lane_axis: int) -> Tuple:
+        return (slice(None),) * lane_axis + (lane,)
+
+    def where_lane(self, lane: int, a, b, lane_axis: int = 0):
+        """Lane ``lane`` sees ``a``; every other lane sees ``b``.
+        ``lane_axis`` locates the lane axis of the (batched) arrays."""
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        ndim = max(a.ndim, b.ndim)
+        cond = (jnp.arange(self.P) == lane).reshape(
+            (1,) * lane_axis + (self.P,) + (1,) * (ndim - lane_axis - 1)
+        )
+        return jnp.where(cond, a, b)
+
+    def poison(self, x, lane: int, lane_axis: int = 0):
+        """Mask-based process death: NaN lane ``lane``'s slice (float leaves
+        only — int/bool bookkeeping is static data a respawn recomputes)."""
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return x.at[self._lane_index(lane, lane_axis)].set(jnp.nan)
+
+    def fetch_lane(self, x, dst: int, src: int, lane_axis: int = 0, into=None):
+        """Single-source REBUILD fetch: lane ``dst``'s slot of ``into``
+        (default ``x``) becomes lane ``src``'s slice of ``x``; every other
+        lane keeps ``into``."""
+        into = x if into is None else into
+        return into.at[self._lane_index(dst, lane_axis)].set(
+            x[self._lane_index(src, lane_axis)]
+        )

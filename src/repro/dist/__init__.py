@@ -1,10 +1,12 @@
 """Distributed-execution helpers: logical-axis sharding rules + param/batch
-sharding construction.
+sharding construction + jax version compatibility.
 
 ``sharding``        - the logical-axis annotation layer (``ax`` + rule tables)
 ``params_sharding`` - NamedSharding trees for params / optimizer state /
                       batches / decode caches (FSDP + batch sharding)
+``compat``          - version shims for mesh construction / ``shard_map`` /
+                      ambient-mesh contexts (modern vs 0.4.x jax)
 """
-from repro.dist import params_sharding, sharding
+from repro.dist import compat, params_sharding, sharding
 
-__all__ = ["params_sharding", "sharding"]
+__all__ = ["compat", "params_sharding", "sharding"]

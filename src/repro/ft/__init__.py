@@ -1,5 +1,6 @@
 """Fault-tolerance substrate: semantics, failure injection, elastic re-mesh,
-and the end-to-end FT-CAQR sweep driver."""
+and the end-to-end FT-CAQR sweep driver (Comm-generic — the SPMD entrypoint
+that runs it under shard_map lives in ``repro.launch.spmd_qr``)."""
 from repro.ft import driver, elastic, failures, semantics, stragglers
 from repro.ft.driver import FTSweepDriver, FTSweepResult, RecoveryEvent, ft_caqr_sweep
 from repro.ft.failures import (

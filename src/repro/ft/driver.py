@@ -6,15 +6,28 @@ panel, after any TSQR butterfly level or trailing-combine level — and finish
 with ``R``, the per-panel implicit-Q factors, and the recovery bundles
 **bit-identical** to the failure-free run (the recovery regression oracle).
 
-Execution model
----------------
-The driver runs the sweep level-stepped over a ``SimComm`` (the P-lane
-single-device simulator — the only place lanes are killable without real
-processes), calling the *same* single-level primitives the production sweep
-is built from: ``ft_tsqr_level`` (core/tsqr), ``trailing_combine_level`` and
+Execution model (DESIGN.md §8)
+------------------------------
+The driver is ONE Comm-generic program (``repro.core.comm``) that runs two
+ways:
+
+* ``SimComm``  — the P-lane single-device simulator: eager, level-stepped,
+  with wall-clock REBUILD latency per event. This is the test/debug path.
+* ``AxisComm`` — inside ``jax.shard_map`` over a device mesh: the production
+  SPMD path the paper describes, one real process per lane. The entrypoint
+  is ``repro.launch.spmd_qr.ft_caqr_sweep_spmd``.
+
+Death and recovery are expressed through the Comm death-mask primitives
+(``comm.poison`` / ``comm.fetch_lane`` / ``comm.where_lane``): the schedule
+is static Python data, so "kill lane 2 after panel 1's level-0 trailing
+combine" compiles to a masked NaN-write on both paths, and every REBUILD
+fetch is a point-to-point collective keyed by static lane indices. The
+driver calls the *same* single-level primitives the production sweep is
+built from: ``ft_tsqr_level`` (core/tsqr), ``trailing_combine_level`` and
 ``_leaf_apply``/``_writeback`` (core/trailing), and the geometry/assembly
 helpers of ``core/caqr``. Failure-free, the two paths are the same
-floating-point program, so bit-identity holds by construction.
+floating-point program, so bit-identity holds by construction; under
+failures it is regression-gated by ``tests/test_spmd_ft_driver.py``.
 
 Failure model (paper §II, ULFM REBUILD semantics)
 -------------------------------------------------
@@ -49,7 +62,9 @@ ledger — the single-source property is enforced by construction); a full
 mid-sweep rebuild touches at most ``log2 P`` distinct survivors across
 artifact classes. If a needed buddy is itself dead (e.g. both members of a
 pair killed at the same point), ``UnrecoverableFailure`` is raised — that is
-the honest limit of one-level redundancy doubling.
+the honest limit of one-level redundancy doubling. Under shard_map the
+schedule is validated at trace time, so an unrecoverable schedule fails
+before any device computes.
 """
 from __future__ import annotations
 
@@ -96,7 +111,12 @@ from repro.ft.failures import (
 @dataclasses.dataclass
 class RecoveryEvent:
     """One REBUILD: which lane died where, and the single-source read ledger
-    (artifact name -> the one surviving lane it was fetched from)."""
+    (artifact name -> the one surviving lane it was fetched from).
+
+    ``elapsed_s`` is wall-clock REBUILD latency under the eager SimComm path;
+    under shard_map the whole sweep is one traced program, so it records
+    trace time only (use ``benchmarks/bench_spmd.py`` for SPMD REBUILD cost).
+    """
 
     point: Tuple[int, str, int]
     lane: int
@@ -118,42 +138,40 @@ class FTSweepResult(NamedTuple):
     events: List[RecoveryEvent]
 
 
-def _poison(x: jax.Array, lane: int, lane_axis: int = 0) -> jax.Array:
-    """NaN out one lane's slice (float leaves only — int/bool bookkeeping is
-    index-derived static data a respawned process recomputes trivially)."""
-    if not jnp.issubdtype(x.dtype, jnp.floating):
-        return x
-    index = (slice(None),) * lane_axis + (lane,)
-    return x.at[index].set(jnp.nan)
-
-
 class FTSweepDriver:
     """Level-stepped windowed CAQR sweep with failure injection + REBUILD.
 
-    ``A0`` is the initial matrix in SimComm layout ``(P, m_loc, n)`` — it
-    doubles as the re-readable data source of the paper's recovery model.
-    Any shape ``caqr_factorize`` accepts is accepted here: the driver runs
-    at the same padded ``sweep_geometry``, and a respawned lane re-reads its
-    *padded* initial slice (re-reading the raw slice and re-padding is the
-    same thing — the pad is static zeros, not lost state), so every REBUILD
-    stays single-source and the outputs stay bit-identical to the
-    failure-free general-shape sweep.
+    Comm-generic (paper §II execution model; DESIGN.md §8): under ``SimComm``
+    lanes are simulator slices of single-device arrays; under ``AxisComm``
+    (inside ``shard_map``) each lane is a real device and every kill/fetch
+    is a masked collective. The two paths run the same floating-point
+    program and produce bit-identical results.
+
+    ``A0`` is the initial matrix — SimComm layout ``(P, m_loc, n)``, per-lane
+    ``(m_loc, n)`` under AxisComm — and doubles as the re-readable data
+    source of the paper's recovery model. Any shape ``caqr_factorize``
+    accepts is accepted here: the driver runs at the same padded
+    ``sweep_geometry``, and a respawned lane re-reads its *padded* initial
+    slice (re-reading the raw slice and re-padding is the same thing — the
+    pad is static zeros, not lost state), so every REBUILD stays
+    single-source and the outputs stay bit-identical to the failure-free
+    general-shape sweep.
     """
 
     def __init__(
         self,
         A0: jax.Array,
-        comm: SimComm,
+        comm,
         panel_width: int,
         schedule: Optional[FailureSchedule] = None,
         detector: Optional[Detector] = None,
     ):
-        assert isinstance(comm, SimComm), (
-            "the FT driver kills lanes; only the SimComm simulator supports "
-            "that on a single device (the SPMD path needs real processes)"
-        )
         self.comm = comm
         self.P = comm.axis_size()
+        # SimComm runs eagerly (lane kills between real dispatches, timed
+        # REBUILDs); AxisComm traces the whole sweep into one program, so
+        # device syncs / wall clocks are meaningless there.
+        self._eager = isinstance(comm, SimComm)
         self.levels = _levels(self.P)
         assert self.levels >= 1, "need at least 2 lanes to tolerate failures"
         self.b = panel_width
@@ -262,11 +280,13 @@ class FTSweepDriver:
         for lane in newly:
             # drain the async-dispatched sweep prefix first, so the latency
             # clock covers only the REBUILD itself (then everything the
-            # rebuild patched)
-            self._sync()
+            # rebuild patched); no-op under tracing
+            if self._eager:
+                self._sync()
             t0 = time.perf_counter()
             reads = self._rebuild(lane, point)
-            self._sync()
+            if self._eager:
+                self._sync()
             self.detector.revive(lane)
             self.events.append(RecoveryEvent(
                 point=point, lane=lane, reads=reads,
@@ -285,50 +305,62 @@ class FTSweepDriver:
         ])
 
     def _obliterate(self, lane: int) -> None:
-        """Process death: NaN every float the lane holds — current block-row,
-        in-flight panel state, and its slices of all stored sweep outputs."""
-        self.A = _poison(self.A, lane)
-        self._window = _poison(self._window, lane)
-        self._leaf_Y = _poison(self._leaf_Y, lane)
-        self._leaf_T = _poison(self._leaf_T, lane)
-        self._R_leaf = _poison(self._R_leaf, lane)
+        """Process death, mask-form: NaN every float the lane holds — current
+        block-row, in-flight panel state, and its slices of all stored sweep
+        outputs (``comm.poison`` — an at-set under SimComm, a masked select
+        on the lane's own device under shard_map)."""
+        poison = self.comm.poison
+        self.A = poison(self.A, lane)
+        self._window = poison(self._window, lane)
+        self._leaf_Y = poison(self._leaf_Y, lane)
+        self._leaf_T = poison(self._leaf_T, lane)
+        self._R_leaf = poison(self._R_leaf, lane)
         if self._R_carry is not None:
-            self._R_carry = _poison(self._R_carry, lane)
-        self._Y2s = [_poison(x, lane) for x in self._Y2s]
-        self._Ts = [_poison(x, lane) for x in self._Ts]
+            self._R_carry = poison(self._R_carry, lane)
+        self._Y2s = [poison(x, lane) for x in self._Y2s]
+        self._Ts = [poison(x, lane) for x in self._Ts]
         if self._level_Y2 is not None:
-            self._level_Y2 = _poison(self._level_Y2, lane, 1)
-            self._level_T = _poison(self._level_T, lane, 1)
+            self._level_Y2 = poison(self._level_Y2, lane, lane_axis=1)
+            self._level_T = poison(self._level_T, lane, lane_axis=1)
         if self._C_local is not None:
-            self._C_local = _poison(self._C_local, lane)
-            self._C_prime = _poison(self._C_prime, lane)
-        self._Ws = [_poison(x, lane) for x in self._Ws]
-        self._Cs_self = [_poison(x, lane) for x in self._Cs_self]
-        self._Cs_buddy = [_poison(x, lane) for x in self._Cs_buddy]
+            self._C_local = poison(self._C_local, lane)
+            self._C_prime = poison(self._C_prime, lane)
+        self._Ws = [poison(x, lane) for x in self._Ws]
+        self._Cs_self = [poison(x, lane) for x in self._Cs_self]
+        self._Cs_buddy = [poison(x, lane) for x in self._Cs_buddy]
         for j in range(len(self.factors)):
             fj = self.factors[j]
             self.factors[j] = PanelFactors(
-                leaf_Y=_poison(fj.leaf_Y, lane),
-                leaf_T=_poison(fj.leaf_T, lane),
-                level_Y2=_poison(fj.level_Y2, lane, 1),
-                level_T=_poison(fj.level_T, lane, 1),
+                leaf_Y=poison(fj.leaf_Y, lane),
+                leaf_T=poison(fj.leaf_T, lane),
+                level_Y2=poison(fj.level_Y2, lane, lane_axis=1),
+                level_T=poison(fj.level_T, lane, lane_axis=1),
                 row_start=fj.row_start, active=fj.active, target=fj.target,
             )
             bj = self.bundles[j]
             self.bundles[j] = RecoveryBundle(
-                W=_poison(bj.W, lane, 1),
-                C_self=_poison(bj.C_self, lane, 1),
-                C_buddy=_poison(bj.C_buddy, lane, 1),
-                Y2=_poison(bj.Y2, lane, 1),
-                T=_poison(bj.T, lane, 1),
+                W=poison(bj.W, lane, lane_axis=1),
+                C_self=poison(bj.C_self, lane, lane_axis=1),
+                C_buddy=poison(bj.C_buddy, lane, lane_axis=1),
+                Y2=poison(bj.Y2, lane, lane_axis=1),
+                T=poison(bj.T, lane, lane_axis=1),
                 self_was_top=bj.self_was_top,
             )
-            self.R_rows[j] = _poison(self.R_rows[j], lane)
+            self.R_rows[j] = poison(self.R_rows[j], lane)
 
     def _rebuild(self, lane: int, point: Tuple[int, str, int]) -> Dict[str, int]:
         """The paper's REBUILD: respawn ``lane``, re-read its initial slice,
         replay completed panels, restore the in-flight panel state — each
-        lost artifact from exactly one surviving buddy."""
+        lost artifact from exactly one surviving buddy.
+
+        Comm-generic expression: replay arithmetic runs per lane through
+        ``comm.map_local`` at the dead lane's *static* geometry (under SPMD
+        every lane runs the same program; survivors' replay results are
+        discarded by the final ``where_lane`` masks — under SimComm the vmap
+        computes the same discarded slots), and every buddy read is a
+        ``fetch_lane``/``ppermute`` keyed by static lane indices, so exactly
+        one survivor sends per artifact on the production path too."""
+        comm = self.comm
         reads: Dict[str, int] = {}
 
         def fetch(artifact: str, source: int) -> int:
@@ -341,18 +373,24 @@ class FTSweepDriver:
             return source
 
         k = self._k
-        rows = self.A0[lane]  # respawn: re-read from the data source
+        # respawn: every lane re-reads its own slice of the data source; only
+        # the dead lane's replay survives the rebuild's masked writes
+        rows = self.A0
         for j in range(k):
             rows = self._replay_panel(j, lane, rows, fetch)
 
         # current panel: recompute the masked leaf from the rebuilt rows
         col0, t_lane, rs, act = lane_geometry(k, self.b, self.m_loc, lane)
-        lY, lT, lR = rec.recompute_leaf(rows, col0, self.b, rs, act)
-        self._leaf_Y = self._leaf_Y.at[lane].set(lY)
-        self._leaf_T = self._leaf_T.at[lane].set(lT)
-        self._R_leaf = self._R_leaf.at[lane].set(lR)
-        self.A = self.A.at[lane].set(rows)
-        self._window = self._window.at[lane].set(rows[:, col0:])
+        lY, lT, lR = comm.map_local(
+            lambda r: rec.recompute_leaf(r, col0, self.b, rs, act)
+        )(rows)
+        self._leaf_Y = comm.where_lane(lane, lY, self._leaf_Y)
+        self._leaf_T = comm.where_lane(lane, lT, self._leaf_T)
+        self._R_leaf = comm.where_lane(lane, lR, self._R_leaf)
+        self.A = comm.where_lane(lane, rows, self.A)
+        self._window = comm.where_lane(
+            lane, comm.map_local(lambda r: r[:, col0:])(rows), self._window
+        )
 
         _, phase, lvl = point
         if phase == PHASE_TSQR:
@@ -360,87 +398,112 @@ class FTSweepDriver:
             # docstring) — one copy restores all completed levels
             src = fetch("tsqr.ladder+R", lane ^ 1)
             for i in range(lvl + 1):
-                self._Y2s[i] = self._Y2s[i].at[lane].set(self._Y2s[i][src])
-                self._Ts[i] = self._Ts[i].at[lane].set(self._Ts[i][src])
-            self._R_carry = self._R_carry.at[lane].set(self._R_carry[src])
+                self._Y2s[i] = comm.fetch_lane(self._Y2s[i], lane, src)
+                self._Ts[i] = comm.fetch_lane(self._Ts[i], lane, src)
+            self._R_carry = comm.fetch_lane(self._R_carry, lane, src)
         elif phase == PHASE_TRAILING:
             src = fetch("tsqr.ladder", lane ^ 1)
-            self._level_Y2 = self._level_Y2.at[:, lane].set(self._level_Y2[:, src])
-            self._level_T = self._level_T.at[:, lane].set(self._level_T[:, src])
+            self._level_Y2 = comm.fetch_lane(
+                self._level_Y2, lane, src, lane_axis=1)
+            self._level_T = comm.fetch_lane(
+                self._level_T, lane, src, lane_axis=1)
             # leaf-applied window: local recompute through the same seam
-            self._C_local = self._C_local.at[lane].set(
-                apply_qt(lY, lT, rows[:, col0:])
+            self._C_local = comm.where_lane(
+                lane,
+                comm.map_local(
+                    lambda Y, T, r: apply_qt(Y, T, r[:, col0:])
+                )(lY, lT, rows),
+                self._C_local,
             )
             # C' after the last completed level: ONE fetch from that level's
             # buddy, replayed through the seam-routed pair combine
             src_c = fetch(f"trailing.cprime@level{lvl}", lane ^ (1 << lvl))
             failed_was_top = ((lane >> lvl) & 1) == ((t_lane >> lvl) & 1)
-            cp = rec.rebuild_cprime_after_level(
-                self._Cs_buddy[lvl][src_c], self._Cs_self[lvl][src_c],
-                self._level_Y2[lvl, lane], self._level_T[lvl, lane],
-                failed_was_top,
-                pair_live=(lane >= t_lane and src_c >= t_lane),
-            )
-            self._C_prime = self._C_prime.at[lane].set(cp)
+            pair_live = lane >= t_lane and src_c >= t_lane
+            recv = lambda x: comm.ppermute(x, [(src_c, lane)])
+            cp = comm.map_local(
+                lambda cb, cs, y2, t: rec.rebuild_cprime_after_level(
+                    cb, cs, y2, t, failed_was_top, pair_live)
+            )(recv(self._Cs_buddy[lvl]), recv(self._Cs_self[lvl]),
+              self._level_Y2[lvl], self._level_T[lvl])
+            self._C_prime = comm.where_lane(lane, cp, self._C_prime)
             # the lane's own bundle rows: mirror of each level-buddy's entry
             # (W is pair-shared; C_self/C_buddy swap sides)
             for s in range(lvl + 1):
                 src_s = fetch(f"trailing.bundle@level{s}", lane ^ (1 << s))
-                w_s = self._Ws[s][src_s]
-                c_self = self._Cs_buddy[s][src_s]
-                c_buddy = self._Cs_self[s][src_s]
-                self._Ws[s] = self._Ws[s].at[lane].set(w_s)
-                self._Cs_self[s] = self._Cs_self[s].at[lane].set(c_self)
-                self._Cs_buddy[s] = self._Cs_buddy[s].at[lane].set(c_buddy)
+                new_w = comm.fetch_lane(self._Ws[s], lane, src_s)
+                new_cs = comm.fetch_lane(
+                    self._Cs_buddy[s], lane, src_s, into=self._Cs_self[s])
+                new_cb = comm.fetch_lane(
+                    self._Cs_self[s], lane, src_s, into=self._Cs_buddy[s])
+                self._Ws[s], self._Cs_self[s], self._Cs_buddy[s] = (
+                    new_w, new_cs, new_cb)
         return reads
 
     def _replay_panel(self, j: int, lane: int, rows: jax.Array, fetch) -> jax.Array:
         """Advance the respawned lane's block-row through completed panel
         ``j`` and restore its slices of that panel's stored outputs."""
-        L = self.levels
+        comm, L = self.comm, self.levels
         col0, t_lane, rs, act = lane_geometry(j, self.b, self.m_loc, lane)
-        lY, lT, _lR = rec.recompute_leaf(rows, col0, self.b, rs, act)
+        lY, lT, _lR = comm.map_local(
+            lambda r: rec.recompute_leaf(r, col0, self.b, rs, act)
+        )(rows)
 
         src_l = fetch(f"panel{j}.tsqr_ladder", lane ^ 1)
         fj = self.factors[j]
         self.factors[j] = PanelFactors(
-            leaf_Y=fj.leaf_Y.at[lane].set(lY),
-            leaf_T=fj.leaf_T.at[lane].set(lT),
-            level_Y2=fj.level_Y2.at[:, lane].set(fj.level_Y2[:, src_l]),
-            level_T=fj.level_T.at[:, lane].set(fj.level_T[:, src_l]),
+            leaf_Y=comm.where_lane(lane, lY, fj.leaf_Y),
+            leaf_T=comm.where_lane(lane, lT, fj.leaf_T),
+            level_Y2=comm.fetch_lane(fj.level_Y2, lane, src_l, lane_axis=1),
+            level_T=comm.fetch_lane(fj.level_T, lane, src_l, lane_axis=1),
             row_start=fj.row_start, active=fj.active, target=fj.target,
         )
         src_r = fetch(f"panel{j}.r_rows", lane ^ 1)
-        self.R_rows[j] = self.R_rows[j].at[lane].set(self.R_rows[j][src_r])
+        self.R_rows[j] = comm.fetch_lane(self.R_rows[j], lane, src_r)
 
-        # final C' of panel j: one fetch from the last-level buddy's bundle
+        # final C' of panel j: one fetch from the last-level buddy's bundle.
+        # Indexing the leading LEVEL axis first leaves per-lane layout on
+        # both comms (SimComm keeps the lane axis in front, AxisComm is
+        # already local), so the replayed combine is one expression.
         bj = self.bundles[j]
-        cp = None
         if act:
             src_c = fetch(f"panel{j}.cprime_final", lane ^ (1 << (L - 1)))
             failed_was_top = ((lane >> (L - 1)) & 1) == ((t_lane >> (L - 1)) & 1)
+            pair_live = lane >= t_lane and (lane ^ (1 << (L - 1))) >= t_lane
+            recv = lambda x: comm.ppermute(x, [(src_c, lane)])
             # stored bundles are zero-padded to full width; slice back to the
             # live window so the replayed combine runs at the original width
-            cp = rec.rebuild_cprime_after_level(
-                bj.C_buddy[L - 1, src_c, :, col0:],
-                bj.C_self[L - 1, src_c, :, col0:],
-                bj.Y2[L - 1, src_c], bj.T[L - 1, src_c],
-                failed_was_top,
-                pair_live=(lane >= t_lane and (lane ^ (1 << (L - 1))) >= t_lane),
-            )
-        rows = rec.rebuild_block_row_through_panel(rows, lY, lT, cp, col0, rs, act)
+            cp = comm.map_local(
+                lambda cb, cs, y2, t: rec.rebuild_cprime_after_level(
+                    cb, cs, y2, t, failed_was_top, pair_live)
+            )(recv(bj.C_buddy[L - 1][..., col0:]),
+              recv(bj.C_self[L - 1][..., col0:]),
+              recv(bj.Y2[L - 1]), recv(bj.T[L - 1]))
+            rows = comm.map_local(
+                lambda r, y, t, c: rec.rebuild_block_row_through_panel(
+                    r, y, t, c, col0, rs, act)
+            )(rows, lY, lT, cp)
+        else:
+            rows = comm.map_local(
+                lambda r, y, t: rec.rebuild_block_row_through_panel(
+                    r, y, t, None, col0, rs, act)
+            )(rows, lY, lT)
 
-        # the lane's own bundle rows for panel j: per-level mirrors
-        W_new, Cs_new, Cb_new = bj.W, bj.C_self, bj.C_buddy
+        # the lane's own bundle rows for panel j: per-level mirrors, written
+        # level-sliced (leading axis) and re-stacked so the same code drives
+        # both comm layouts
+        W_lv = [bj.W[s] for s in range(L)]
+        Cs_lv = [bj.C_self[s] for s in range(L)]
+        Cb_lv = [bj.C_buddy[s] for s in range(L)]
         for s in range(L):
             src_s = fetch(f"panel{j}.bundle@level{s}", lane ^ (1 << s))
-            W_new = W_new.at[s, lane].set(bj.W[s, src_s])
-            Cs_new = Cs_new.at[s, lane].set(bj.C_buddy[s, src_s])
-            Cb_new = Cb_new.at[s, lane].set(bj.C_self[s, src_s])
+            W_lv[s] = comm.fetch_lane(bj.W[s], lane, src_s)
+            Cs_lv[s] = comm.fetch_lane(bj.C_buddy[s], lane, src_s, into=Cs_lv[s])
+            Cb_lv[s] = comm.fetch_lane(bj.C_self[s], lane, src_s, into=Cb_lv[s])
         self.bundles[j] = RecoveryBundle(
-            W=W_new, C_self=Cs_new, C_buddy=Cb_new,
-            Y2=bj.Y2.at[:, lane].set(bj.Y2[:, src_l]),
-            T=bj.T.at[:, lane].set(bj.T[:, src_l]),
+            W=jnp.stack(W_lv), C_self=jnp.stack(Cs_lv), C_buddy=jnp.stack(Cb_lv),
+            Y2=comm.fetch_lane(bj.Y2, lane, src_l, lane_axis=1),
+            T=comm.fetch_lane(bj.T, lane, src_l, lane_axis=1),
             self_was_top=bj.self_was_top,
         )
         return rows
@@ -448,14 +511,38 @@ class FTSweepDriver:
 
 def ft_caqr_sweep(
     A0: jax.Array,
-    comm: SimComm,
+    comm,
     panel_width: int,
     schedule: Optional[FailureSchedule] = None,
 ) -> FTSweepResult:
-    """Run the full windowed FT-CAQR sweep under a failure schedule.
+    """Run the full windowed FT-CAQR sweep under a failure schedule
+    (paper §II-III end to end).
 
     Returns ``(R, factors, bundles, events)`` — bit-identical to
     ``caqr_factorize(A0, comm, panel_width, collect_bundles=True,
     use_scan=False)`` regardless of the schedule (the paper's recovery
-    guarantee), with one ``RecoveryEvent`` per REBUILD."""
+    guarantee), with one ``RecoveryEvent`` per REBUILD.
+
+    ``comm`` selects the execution: ``SimComm(P)`` for the single-device
+    simulator, ``AxisComm(axis)`` inside ``shard_map`` for the production
+    SPMD path (use ``repro.launch.spmd_qr.ft_caqr_sweep_spmd`` which wires
+    the mesh and output layouts).
+
+    Example (simulator; kill lane 1 after panel 0's level-0 trailing
+    combine, recover, and match the failure-free sweep bit for bit):
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import SimComm, caqr_factorize
+    >>> from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+    >>> A = jnp.asarray(np.random.default_rng(0).standard_normal((2, 4, 4)),
+    ...                 jnp.float32)
+    >>> sched = FailureSchedule(events={sweep_point(0, "trailing", 0): [1]})
+    >>> out = ft_caqr_sweep(A, SimComm(2), 4, schedule=sched)
+    >>> ref = caqr_factorize(A, SimComm(2), 4, collect_bundles=True,
+    ...                      use_scan=False)
+    >>> bool(jnp.array_equal(out.R, ref.R))
+    True
+    >>> [(e.point, e.lane) for e in out.events]
+    [((0, 'trailing', 0), 1)]
+    """
     return FTSweepDriver(A0, comm, panel_width, schedule).run()

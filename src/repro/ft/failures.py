@@ -35,7 +35,17 @@ SWEEP_PHASES = (PHASE_LEAF, PHASE_TSQR, PHASE_TRAILING)
 def sweep_point(panel: int, phase: str, level: int = 0) -> Tuple[int, str, int]:
     """Address of an interruptible point in the CAQR sweep (a schedule key).
 
-    ``level`` is the just-completed tree level (ignored for ``leaf``)."""
+    The paper's failure model (§II) allows a process to die at any point of
+    the factorization; the distinct *recoverable states* are the boundaries
+    between tree levels (§III-B for TSQR, §III-C for the trailing update),
+    which is exactly this address space. ``level`` is the just-completed
+    tree level (ignored for ``leaf``).
+
+    >>> sweep_point(2, "tsqr", 1)
+    (2, 'tsqr', 1)
+    >>> sweep_point(0, "leaf")
+    (0, 'leaf', 0)
+    """
     assert phase in SWEEP_PHASES, phase
     return (panel, phase, 0 if phase == PHASE_LEAF else level)
 
@@ -45,7 +55,11 @@ def iter_sweep_points(n_panels: int, levels: int):
     ``levels``-level tree, in driver execution order — the kill-matrix
     enumeration (tests, benchmarks). ``n_panels`` comes from the sweep's
     ``caqr.sweep_geometry`` (``ceil(min(m, n) / b)``), so the enumeration
-    covers ragged and wide geometries exactly as the driver walks them."""
+    covers ragged and wide geometries exactly as the driver walks them.
+
+    >>> list(iter_sweep_points(n_panels=1, levels=2))  # 1 panel, P=4 tree
+    [(0, 'leaf', 0), (0, 'tsqr', 0), (0, 'tsqr', 1), (0, 'trailing', 0), (0, 'trailing', 1)]
+    """
     for k in range(n_panels):
         yield sweep_point(k, PHASE_LEAF)
         for s in range(levels):
@@ -72,7 +86,18 @@ class FailureSchedule:
     """{step: [lanes that die at the start of that step]}.
 
     Keys are ints for the training loop, ``sweep_point(...)`` tuples for the
-    CAQR sweep driver."""
+    CAQR sweep driver. The schedule is *static Python data*: under the SPMD
+    path (``repro.launch.spmd_qr``) it is broadcast to every lane at trace
+    time — each lane's compiled program contains the full schedule, the
+    analogue of the paper's §II assumption that survivors agree on who
+    failed and where.
+
+    >>> s = FailureSchedule(events={sweep_point(1, "tsqr", 0): [2, 3]})
+    >>> s.lanes_failing_at(sweep_point(1, "tsqr", 0))
+    [2, 3]
+    >>> s.lanes_failing_at(sweep_point(0, "leaf"))
+    []
+    """
 
     events: Dict[Hashable, List[int]] = dataclasses.field(default_factory=dict)
 
@@ -81,6 +106,19 @@ class FailureSchedule:
 
 
 class Detector:
+    """ULFM-style failure detection (paper §II): deaths scheduled at a step
+    fire when the step begins; an operation that *touches* a failed lane
+    raises ``LaneFailure``, operations not involving it proceed unknowingly.
+
+    >>> d = Detector(4, FailureSchedule(events={7: [1]}))
+    >>> d.begin_step(7)          # the scheduled death fires (once)
+    [1]
+    >>> d.begin_step(7)          # a replay does not re-kill the respawn
+    []
+    >>> d.revive(1); sorted(d.dead)
+    []
+    """
+
     def __init__(self, n_lanes: int, schedule: Optional[FailureSchedule] = None):
         self.n = n_lanes
         self.schedule = schedule or FailureSchedule()

@@ -1,5 +1,18 @@
-"""FT-MPI / ULFM error-handling semantics (paper §II), as a policy enum the
-training supervisor executes on detected failures."""
+"""FT-MPI / ULFM error-handling semantics (paper §II), as a policy enum.
+
+The paper builds on FT-MPI's communicator-recovery modes: when a process
+failure is detected, the surviving world chooses how to continue. The
+training supervisor (``repro.train``) executes these policies on detected
+failures; the FT-CAQR sweep driver (``repro.ft.driver``) implements REBUILD
+— the mode the paper's recovery algorithm (§III-B/III-C) is written for,
+where the respawned rank's state is reconstructed from its re-read input
+slice plus one surviving buddy per artifact.
+
+>>> Semantics.REBUILD.value
+'rebuild'
+>>> [s.name for s in Semantics]
+['SHRINK', 'BLANK', 'REBUILD', 'ABORT']
+"""
 from __future__ import annotations
 
 import enum

@@ -38,6 +38,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config, get_shape
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.dist import compat
 from repro.dist import params_sharding as psh
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_production_mesh, make_qr_mesh
@@ -237,7 +238,7 @@ def _compile_variant(cfg, shape, mesh, multi_pod, rule_overrides=None,
     else:
         donate = ()
     t0 = time.time()
-    with jax.set_mesh(mesh), shd.use_rules(rules):
+    with compat.set_mesh(mesh), shd.use_rules(rules):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
@@ -423,12 +424,11 @@ def run_caqr_cell(mesh_kind: str, out_dir: str, m_rows: int = 65536,
 
     spec = P("qr", None)
     fn = jax.jit(
-        jax.shard_map(qr_fn, mesh=mesh, in_specs=spec, out_specs=P(),
-                      check_vma=False)
+        compat.shard_map(qr_fn, mesh, in_specs=spec, out_specs=P())
     )
     A = jax.ShapeDtypeStruct((m_rows, n_cols), jnp.float32)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = fn.lower(A)
         compiled = lowered.compile()
     ma = compiled.memory_analysis()

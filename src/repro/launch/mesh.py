@@ -7,13 +7,11 @@ import; everything else sees the real (single) device.
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
+from repro.dist import compat
 
 
 def _mk(shape, axes):
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,127 @@
+"""Production SPMD entry for the FT-CAQR sweep: ``shard_map`` over a 1-D
+lane mesh (paper §II's execution model, one process per lane).
+
+``ft_caqr_sweep_spmd`` runs the same Comm-generic driver the simulator runs
+(``repro.ft.driver``), but over ``AxisComm`` inside ``shard_map``: each
+device holds one lane's block-row, every exchange lowers to a real
+``collective-permute``/``all-reduce``, and the failure schedule — static
+Python data — is broadcast to every lane at trace time (each lane's compiled
+program contains the full schedule, the SPMD analogue of the paper's
+agreed-on failure detection). Death is the Comm death-mask representation
+(DESIGN.md §8): the scheduled lane NaN-masks its own state, REBUILD fetches
+are point-to-point permutes from the single surviving buddy.
+
+Output layout: the gathered global result is **leaf-for-leaf identical to a
+``SimComm`` run** — the body reinserts the lane axis exactly where the
+simulator's batching puts it — so the two paths are directly comparable
+with ``jax.tree_util`` equality and no reshaping. That equivalence (R,
+factors, bundles, post-REBUILD state, bit for bit) is the repo's SPMD
+oracle, gated by ``tests/test_spmd_ft_driver.py`` on aligned, ragged, and
+wide geometries.
+
+Scheduling caveats inherited from tracing the whole sweep into one program:
+``RecoveryEvent.elapsed_s`` records trace time, not device time (use
+``benchmarks/bench_spmd.py`` for measured SPMD REBUILD cost), and an
+unrecoverable schedule raises ``UnrecoverableFailure`` at trace time,
+before any device computes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.caqr import PanelFactors
+from repro.core.comm import AxisComm
+from repro.core.trailing import RecoveryBundle
+from repro.dist import compat
+from repro.ft.driver import FTSweepDriver, FTSweepResult
+from repro.ft.failures import FailureSchedule
+
+# Lane-axis position of every per-lane leaf in the SimComm result layout.
+# The shard_map body expands a size-1 axis there; with the matching out_spec
+# the gathered global arrays are layout-identical to a SimComm run.
+_R_LANE_AXIS = 0
+_FACTORS_LANE_AXIS = PanelFactors(
+    leaf_Y=1, leaf_T=1, level_Y2=2, level_T=2,
+    row_start=1, active=1, target=1,
+)
+_BUNDLE_LANE_AXIS = RecoveryBundle(
+    W=2, C_self=2, C_buddy=2, Y2=2, T=2, self_was_top=2,
+)
+
+
+def make_lane_mesh(n_lanes: Optional[int] = None, axis_name: str = "qr"):
+    """1-D device mesh, one CAQR lane per device (default: all devices).
+
+    ``n_lanes`` must be a power of two (the butterfly's requirement). On a
+    CPU host, force a multi-device platform with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (see ``examples/spmd_quickstart.py``).
+    """
+    if n_lanes is None:
+        n_lanes = len(jax.devices())
+    return compat.make_mesh((n_lanes,), (axis_name,))
+
+
+def ft_caqr_sweep_spmd(
+    A: jax.Array,
+    panel_width: int,
+    schedule: Optional[FailureSchedule] = None,
+    mesh=None,
+    axis_name: str = "qr",
+) -> FTSweepResult:
+    """Run the windowed FT-CAQR sweep under ``shard_map`` on a device mesh.
+
+    A: the full ``(m, n)`` matrix; rows are block-sharded over the mesh's
+        lane axis (``m`` must divide by the lane count — each lane re-reads
+        its own contiguous block-row on REBUILD, the paper's data-source
+        model). Any per-lane shape ``ft_caqr_sweep`` accepts works: ragged
+        and wide geometries run at the padded ``sweep_geometry`` inside the
+        mapped body, identically to the simulator.
+    panel_width: b.
+    schedule: static lane-death schedule, broadcast to every lane at trace
+        time; ``None`` = failure-free.
+    mesh: a 1-D mesh from ``make_lane_mesh`` (default: one lane per visible
+        device). The lane count must be a power of two.
+
+    Returns ``FTSweepResult`` with the *SimComm layout*: ``R`` is
+    ``(P, min(m,n), n)`` (per-lane replicated copies), factors/bundles carry
+    the lane axis where the simulator's batching puts it, and ``events``
+    holds the trace-time REBUILD ledger (single-source reads per artifact).
+    """
+    if mesh is None:
+        mesh = make_lane_mesh(axis_name=axis_name)
+    n_lanes = mesh.shape[axis_name]
+    m, n = A.shape
+    assert m % n_lanes == 0, (
+        f"rows ({m}) must block-shard evenly over {n_lanes} lanes"
+    )
+    events_log = []
+
+    def body(A_local):
+        drv = FTSweepDriver(A_local, AxisComm(axis_name), panel_width, schedule)
+        res = drv.run()
+        events_log.append(res.events)
+        factors = jax.tree_util.tree_map(
+            jnp.expand_dims, res.factors, _FACTORS_LANE_AXIS)
+        bundles = jax.tree_util.tree_map(
+            jnp.expand_dims, res.bundles, _BUNDLE_LANE_AXIS)
+        return jnp.expand_dims(res.R, _R_LANE_AXIS), factors, bundles
+
+    spec_of = lambda lane_axis: P(
+        *([None] * lane_axis + [axis_name]))
+    out_specs = (
+        spec_of(_R_LANE_AXIS),
+        jax.tree_util.tree_map(spec_of, _FACTORS_LANE_AXIS),
+        jax.tree_util.tree_map(spec_of, _BUNDLE_LANE_AXIS),
+    )
+    mapped = compat.shard_map(
+        body, mesh, in_specs=P(axis_name, None), out_specs=out_specs)
+    with compat.set_mesh(mesh):
+        R, factors, bundles = jax.jit(mapped)(A)
+    # the trace populated the static event ledger exactly once (fresh jit)
+    (events,) = events_log
+    return FTSweepResult(R=R, factors=factors, bundles=bundles, events=events)

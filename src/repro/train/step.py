@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist import compat
 from repro.models import api
 import repro.optim.adamw as adamw_mod
 from repro.optim import powersgd
@@ -125,12 +126,11 @@ def make_pod_train_step(
     state_specs = PodTrainState(
         params=P(), opt_state=P(), psgd=P(), step=P()
     )
-    step = jax.shard_map(
+    step = compat.shard_map(
         per_pod,
-        mesh=mesh,
+        mesh,
         in_specs=(state_specs, P("pod")),
         out_specs=(state_specs, P()),
         axis_names={"pod"},
-        check_vma=False,
     )
     return step

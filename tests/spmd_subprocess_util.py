@@ -1,0 +1,22 @@
+"""Shared harness for multi-device SPMD tests: run a code snippet in a
+subprocess with N forced host devices, so the main test process keeps
+seeing one device (jax locks the device count at first init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_forced_devices(code: str, n_devices: int, timeout: int = 900) -> str:
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
+           "PYTHONPATH": "src"}
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout,
+        cwd=_REPO_ROOT,
+    )
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout

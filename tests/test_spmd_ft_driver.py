@@ -1,0 +1,95 @@
+"""SimComm <-> shard_map differential gate for the FT sweep (tier-1).
+
+The tentpole claim of the SPMD execution model (DESIGN.md §8): the
+Comm-generic FT driver produces **bit-identical** R, per-panel factors,
+recovery bundles, and post-REBUILD state whether it runs on the P-lane
+simulator or under ``shard_map`` on a real device mesh — including
+mid-sweep lane kills at every phase, on aligned, ragged, and wide
+geometries.
+
+Runs in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_
+count=4`` so the main test process keeps seeing one device; one subprocess
+covers all geometries/schedules (jax startup dominates). The ragged
+geometry is PR 3's ``P=4, m_loc=6, n=10, b=4`` — unaligned lane heights AND
+a ragged last panel, the hardest padding case.
+"""
+from spmd_subprocess_util import run_forced_devices
+
+
+def _run(code: str) -> str:
+    return run_forced_devices(code, n_devices=4)
+
+
+def test_ft_sweep_spmd_differential():
+    """Failure-free + one kill per phase (leaf / mid-TSQR / mid-trailing),
+    on ragged, aligned, and wide geometries: every leaf of the result pytree
+    bitwise-equal between SimComm and the shard_map path, and the REBUILD
+    read ledgers identical."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SimComm
+        from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+        from repro.launch.spmd_qr import ft_caqr_sweep_spmd, make_lane_mesh
+
+        mesh = make_lane_mesh(4)
+
+        def compare(tag, m_loc, n, b, sched):
+            P_ = 4
+            rng = np.random.default_rng(3)
+            A = jnp.asarray(rng.standard_normal((P_ * m_loc, n)), jnp.float32)
+            got = ft_caqr_sweep_spmd(A, b, schedule=sched, mesh=mesh)
+            sim = ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b,
+                                schedule=sched)
+            gl = jax.tree_util.tree_leaves((got.R, got.factors, got.bundles))
+            sl = jax.tree_util.tree_leaves((sim.R, sim.factors, sim.bundles))
+            assert len(gl) == len(sl)
+            for g, s in zip(gl, sl):
+                g, s = np.asarray(g), np.asarray(s)
+                assert g.shape == s.shape and g.dtype == s.dtype, tag
+                assert np.array_equal(g, s), f"{tag}: leaf mismatch"
+            assert ([(e.point, e.lane, e.reads) for e in got.events]
+                    == [(e.point, e.lane, e.reads) for e in sim.events]), tag
+            print("OK", tag)
+
+        # ragged (PR 3 geometry): one kill per phase + failure-free
+        for tag, sched in [
+            ("ragged-free", None),
+            ("ragged-leaf", FailureSchedule(events={sweep_point(0, "leaf"): [1]})),
+            ("ragged-tsqr", FailureSchedule(events={sweep_point(1, "tsqr", 0): [2]})),
+            ("ragged-trail", FailureSchedule(events={sweep_point(2, "trailing", 1): [3]})),
+        ]:
+            compare(tag, 6, 10, 4, sched)
+
+        # aligned square sweep, repeat-death schedule
+        compare("aligned-free", 8, 16, 4, None)
+        compare("aligned-2kills", 8, 16, 4, FailureSchedule(events={
+            sweep_point(0, "trailing", 0): [1],
+            sweep_point(3, "trailing", 1): [1],
+        }))
+
+        # wide (n > P*m_loc): trailing-only R2 columns survive a kill
+        compare("wide-kill", 4, 24, 4, FailureSchedule(events={
+            sweep_point(2, "trailing", 1): [2],
+        }))
+        print("DIFFERENTIAL_OK")
+    """)
+    assert "DIFFERENTIAL_OK" in out
+
+
+def test_ft_sweep_spmd_unrecoverable_at_trace_time():
+    """A buddy-pair death is detected while tracing the shard_map program —
+    the schedule is static data, so the SPMD path refuses before any device
+    computes (same UnrecoverableFailure as the simulator)."""
+    out = _run("""
+        import numpy as np, jax.numpy as jnp
+        from repro.ft import FailureSchedule, UnrecoverableFailure, sweep_point
+        from repro.launch.spmd_qr import ft_caqr_sweep_spmd, make_lane_mesh
+        A = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((24, 10)), jnp.float32)
+        sched = FailureSchedule(events={sweep_point(1, "trailing", 0): [2, 3]})
+        try:
+            ft_caqr_sweep_spmd(A, 4, schedule=sched, mesh=make_lane_mesh(4))
+        except UnrecoverableFailure:
+            print("UNRECOVERABLE_OK")
+    """)
+    assert "UNRECOVERABLE_OK" in out

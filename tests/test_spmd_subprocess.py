@@ -1,25 +1,12 @@
 """Multi-device SPMD tests (subprocess with 8 forced host devices so the
 main test process keeps seeing one device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-_ENV = {**os.environ,
-        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-        "PYTHONPATH": "src"}
+from spmd_subprocess_util import run_forced_devices
 
 
 def _run(code: str) -> str:
-    r = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        env=_ENV, capture_output=True, text=True, timeout=900,
-        cwd=os.path.join(os.path.dirname(__file__), ".."),
-    )
-    assert r.returncode == 0, r.stdout + "\n" + r.stderr
-    return r.stdout
+    return run_forced_devices(code, n_devices=8)
 
 
 @pytest.mark.slow
@@ -29,20 +16,23 @@ def test_shardmap_matches_simcomm():
         from jax.sharding import PartitionSpec as P
         from repro.core import AxisComm, SimComm, ft_tsqr, ft_tsqr_q
         from repro.core.caqr import caqr_factorize, caqr_factorize_spmd
+        from repro.dist import compat
+        # b=4 / m_loc=8 tiles: XLA lowers the per-lane and vmap-batched
+        # gemms identically on CPU at this size, so the comparison is
+        # bitwise (DESIGN.md section 8; larger tiles reassociate on CPU)
         Pn = 8
-        mesh = jax.make_mesh((Pn,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((Pn,), ("x",))
         rng = np.random.default_rng(0)
-        A = jnp.asarray(rng.standard_normal((Pn * 16, 64)), jnp.float32)
+        A = jnp.asarray(rng.standard_normal((Pn * 8, 32)), jnp.float32)
         def f(a):
-            return caqr_factorize_spmd(a, "x", 8).R
-        with jax.set_mesh(mesh):
-            R = jax.jit(jax.shard_map(f, mesh=mesh, check_vma=False,
-                                      in_specs=P("x", None), out_specs=P()))(A)
-        sim = caqr_factorize(A.reshape(Pn, 16, 64), SimComm(Pn), 8)
+            return caqr_factorize_spmd(a, "x", 4).R
+        with compat.set_mesh(mesh):
+            R = jax.jit(compat.shard_map(f, mesh, in_specs=P("x", None),
+                                         out_specs=P()))(A)
+        sim = caqr_factorize(A.reshape(Pn, 8, 32), SimComm(Pn), 4)
         assert np.array_equal(np.asarray(R), np.asarray(sim.R[0])), "mismatch"
-        hlo = jax.jit(jax.shard_map(f, mesh=mesh, check_vma=False,
-                                    in_specs=P("x", None), out_specs=P())
+        hlo = jax.jit(compat.shard_map(f, mesh, in_specs=P("x", None),
+                                       out_specs=P())
                       ).lower(A).compile().as_text()
         assert "collective-permute" in hlo
         print("SPMD_OK")
@@ -58,7 +48,7 @@ def test_dryrun_cell_small_mesh():
         import dataclasses, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_smoke
-        from repro.dist import params_sharding as psh, sharding as shd
+        from repro.dist import compat, params_sharding as psh, sharding as shd
         from repro.launch.mesh import make_small_mesh
         from repro.models import api
         from repro.optim.adamw import adamw
@@ -83,13 +73,15 @@ def test_dryrun_cell_small_mesh():
                  "kv_heads": "model", "ff": "model", "experts": "model",
                  "ssm_heads": "model", "lru": "model", "seq_shard": None,
                  "kv_seq_shard": None}
-        with jax.set_mesh(mesh), shd.use_rules(rules):
+        with compat.set_mesh(mesh), shd.use_rules(rules):
             compiled = jax.jit(step, in_shardings=(state_sh, b_sh),
                                out_shardings=(state_sh, None)).lower(
                 state_abs, batch_abs).compile()
         ma = compiled.memory_analysis()
         assert ma.temp_size_in_bytes > 0
         ca = compiled.cost_analysis()
+        if isinstance(ca, list):  # pre-0.5 jax returns [dict]
+            ca = ca[0]
         assert ca.get("flops", 0) > 0
         print("DRYRUN_OK", int(ma.temp_size_in_bytes))
     """)
@@ -127,8 +119,8 @@ def test_pod_train_step_with_compression():
         from repro.optim import powersgd
         from repro.optim.schedule import constant
         from repro.train.step import PodTrainState, make_pod_train_step
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.dist import compat
+        mesh = compat.make_mesh((2, 4), ("pod", "data"))
         cfg = get_smoke("tinyllama-1.1b")
         params = tf.init_params(cfg, jax.random.key(0))
         opt = adamw()
@@ -139,7 +131,7 @@ def test_pod_train_step_with_compression():
                                    compression_rank=4)
         dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
         b = {k: jnp.asarray(v) for k, v in make_batch(dcfg, 0).items()}
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             state2, metrics = jax.jit(step)(state, b)
         assert np.isfinite(float(metrics["loss"]))
         # params changed and identical across pods (replicated out-spec)

@@ -25,10 +25,14 @@ DOCS = ["README.md", "DESIGN.md"]
 # Load-bearing sections: documentation a refactor must keep (referenced from
 # code docstrings and tests). A heading rename/removal fails the gate.
 REQUIRED_HEADINGS = {
-    "README.md": ["## Shape support"],
+    "README.md": [
+        "## Shape support",
+        "## Execution model: one program, two paths",
+    ],
     "DESIGN.md": [
         "## 5. Recovery data-flow",
         "## 7. Ragged-panel geometry and padding semantics",
+        "## 8. SPMD execution model",
     ],
 }
 

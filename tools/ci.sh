@@ -16,8 +16,13 @@
 #
 #   tools/ci.sh          docs check (tools/check_docs.py), tier-1 pytest,
 #                        end-to-end example smoke (quickstart + the FT
-#                        driver/training demo), then `benchmarks/run.py
-#                        --quick`, which also refreshes BENCH_core.json
+#                        driver/training demo), the SPMD smoke tier
+#                        (examples/spmd_quickstart.py: shard_map FT sweep +
+#                        kill on a forced 4-device host mesh, checked
+#                        bitwise vs SimComm), the repro.ft docstring-example
+#                        doctests, then `benchmarks/run.py --quick`, which
+#                        also refreshes BENCH_core.json (incl. the `spmd`
+#                        SimComm-vs-shard_map section)
 #   tools/ci.sh --slow   additionally run the slow-marked tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -52,6 +57,13 @@ fi
 echo "== example smoke =="
 python examples/quickstart.py
 python examples/failure_recovery_training.py --steps 8
+
+echo "== SPMD smoke (shard_map FT sweep on a forced 4-device host mesh) =="
+python examples/spmd_quickstart.py
+
+echo "== repro.ft API doctest examples =="
+python -m doctest src/repro/ft/driver.py src/repro/ft/failures.py \
+    src/repro/ft/semantics.py && echo "doctests OK"
 
 echo "== benchmark smoke (writes BENCH_core.json) =="
 python -m benchmarks.run --quick
