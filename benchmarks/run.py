@@ -24,6 +24,15 @@ def main() -> None:
     ap.add_argument("--out", default=os.path.abspath(_DEFAULT_OUT))
     args = ap.parse_args()
 
+    # previous record = the regression baseline for the online-path gate
+    baseline = {}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                baseline = json.load(f)
+        except (ValueError, OSError):
+            baseline = {}
+
     from benchmarks import bench_core, roofline
 
     rows = []
@@ -81,12 +90,45 @@ def main() -> None:
           f"(+{spmd['s_spmd_compile']:.1f}s compile); "
           f"1-kill REBUILD adds {spmd['us_spmd_rebuild_delta']:.0f}us/sweep")
 
+    from benchmarks import bench_online
+
+    online = bench_online.suite(quick=args.quick)
+    st = online["stepped"]
+    print()
+    print("# online path: host-orchestrated stepped sweep vs monolithic")
+    print(f"# P={st['config']['P']} m_loc={st['config']['m_loc']} "
+          f"n={st['config']['n']} b={st['config']['b']}: "
+          f"monolithic jit {st['us_monolithic_jit']:.0f}us, "
+          f"eager driver {st['us_driver_eager']:.0f}us")
+    print("segment,points,us_sweep")
+    for name, row in st["by_segment"].items():
+        print(f"{name},{row['segment_points']},{row['us']:.0f}")
+    det = online["detection"]
+    print(f"# stepped(1) overhead {st['overhead_vs_driver']:.2f}x vs driver, "
+          f"{st['overhead_vs_jit']:.2f}x vs jit; detect-to-recovered "
+          f"{det['us_detect_to_recovered']:.0f}us "
+          f"(poll {det['us_poll_avg']:.0f}us/boundary, "
+          f"{det['fetches']} fetches)")
+
+    # gate BEFORE recording: a regressed measurement must not become the
+    # next run's baseline (the gate would otherwise fail exactly once),
+    # and a passing one is recorded with the damped-baseline floor so a
+    # lucky-fast outlier cannot set a bar ordinary runs miss by noise
+    ok, msg = bench_online.check_regression(online, baseline.get("online"))
     record = {"schema": 1, "quick": args.quick, "rows": rows,
               "sweep_cost": sweep, "recovery": recovery,
-              "general_shapes": general, "spmd": spmd}
+              "general_shapes": general, "spmd": spmd,
+              "online": bench_online.baseline_to_record(
+                  online, baseline.get("online"))}
+    if not ok:
+        record["online"] = baseline.get("online")   # keep the old baseline
+        record["online_rejected"] = online          # the failing numbers
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")
+    print(f"# online regression gate: {msg}")
+    if not ok:
+        raise SystemExit(2)
 
     if not args.quick:
         rl = roofline.load_all()

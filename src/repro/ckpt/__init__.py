@@ -1,3 +1,6 @@
-"""Checkpointing: sharded disk checkpoints + diskless buddy/parity stores."""
-from repro.ckpt import diskless, save
-__all__ = ["diskless", "save"]
+"""Checkpointing: sharded disk checkpoints, diskless buddy/parity stores,
+and suspend/restore of in-flight FT-CAQR sweeps (``repro.ckpt.sweep``)."""
+from repro.ckpt import diskless, save, sweep
+from repro.ckpt.sweep import load_sweep_state, save_sweep_state
+__all__ = ["diskless", "save", "sweep", "load_sweep_state",
+           "save_sweep_state"]

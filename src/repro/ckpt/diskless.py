@@ -58,6 +58,40 @@ class BuddyStore:
         return self._store[holder]
 
 
+class SweepStateStore:
+    """Diskless host-memory snapshots of an in-flight FT-CAQR sweep.
+
+    The online orchestrator (``repro.ft.online.orchestrator``) pushes the
+    live ``SweepState`` here every ``persist_every`` segment boundaries; if
+    the orchestrating host itself dies, a successor restores the last
+    boundary state and resumes — the sweep-level analogue of the training
+    loop's buddy checkpointing above (on a real pod this memory is a
+    neighbor host's RAM; here it stands in). Keeps ``keep`` most-recent
+    snapshots (the previous one guards against dying mid-push).
+    """
+
+    def __init__(self, keep: int = 2):
+        assert keep >= 1
+        self.keep = keep
+        self._snaps: List[Dict[str, np.ndarray]] = []
+
+    def push(self, state) -> None:
+        from repro.ft.online.state import sweep_state_to_host
+
+        self._snaps.append(sweep_state_to_host(state))
+        del self._snaps[: -self.keep]
+
+    def __len__(self) -> int:
+        return len(self._snaps)
+
+    def restore(self, back: int = 0):
+        """Rebuild the ``back``-th most recent snapshot (0 = latest)."""
+        from repro.ft.online.state import sweep_state_from_host
+
+        assert self._snaps, "no snapshot pushed"
+        return sweep_state_from_host(self._snaps[-1 - back])
+
+
 class ParityStore:
     """XOR parity per group of ``group`` lanes."""
 

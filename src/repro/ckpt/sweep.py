@@ -1,0 +1,48 @@
+"""Suspend/persist/restore of in-flight factorizations (DESIGN.md §9).
+
+A ``SweepState`` (``repro.ft.online.state``) is the *complete* loop state of
+the windowed FT-CAQR sweep at a recoverable boundary, so writing it to disk
+suspends the factorization and loading it in a fresh process resumes it —
+iterating ``sweep_step`` from the restored state finishes bit-identically
+to the uninterrupted run (regression-gated by
+``tests/test_online_recovery.py``).
+
+Wire format: one ``.npz`` holding the flattened named arrays plus a
+``__meta__`` JSON record (geometry, cursor, tuple arities) — see
+``sweep_state_to_host``. Everything is plain numpy: a state can be saved,
+inspected, or shipped with no live jax devices.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.ft.online.state import (
+    SweepState,
+    sweep_state_from_host,
+    sweep_state_to_host,
+)
+
+
+def save_sweep_state(path: str, state: SweepState) -> str:
+    """Suspend: write a mid-sweep state to ``path`` (``.npz`` appended if
+    missing). Atomic-ish: writes ``path + '.tmp'`` then renames."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    arrays = sweep_state_to_host(state)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_sweep_state(path: str, to_device: bool = True) -> SweepState:
+    """Resume: load a saved sweep state. ``to_device=False`` keeps numpy
+    leaves (pure-host inspection)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    return sweep_state_from_host(arrays, to_device=to_device)

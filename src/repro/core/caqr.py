@@ -98,6 +98,15 @@ class SweepGeometry(NamedTuple):
         """True iff no padding is needed (the seed-exact fast path)."""
         return self.m_loc_pad == self.m_loc and self.n_work == self.n
 
+    @property
+    def levels(self) -> int:
+        """Tree levels of the P-lane butterfly (= log2 P). The online
+        state machine's cursor arithmetic, boundary attribution, and
+        REBUILD replay (``repro.ft.online``, ``repro.ft.driver``) all run
+        off this."""
+        assert self.P & (self.P - 1) == 0, self.P
+        return self.P.bit_length() - 1
+
 
 def _ceil_to(x: int, q: int) -> int:
     return -(-x // q) * q

@@ -15,6 +15,13 @@ This module executes the FT trailing update level by level in SimComm mode so
 tests can kill a lane at any level, run the paper's recovery, resume, and
 compare against the failure-free run. The level-stepping code calls the same
 ``_combine`` the production path uses.
+
+These per-artifact reconstruction primitives (``recompute_leaf``,
+``rebuild_cprime_after_level``, ``rebuild_block_row_through_panel``) are the
+recompute seams every REBUILD path routes through: the scheduled driver and
+the online orchestrator (``repro.ft.driver.rebuild_state``, shared by
+``repro.ft.online``) both express a full mid-sweep rebuild as compositions
+of exactly these calls plus single-source ``fetch_lane`` reads.
 """
 from __future__ import annotations
 

@@ -1,18 +1,32 @@
 """Fault-tolerance substrate: semantics, failure injection, elastic re-mesh,
-and the end-to-end FT-CAQR sweep driver (Comm-generic — the SPMD entrypoint
-that runs it under shard_map lives in ``repro.launch.spmd_qr``)."""
+the end-to-end FT-CAQR sweep driver, and the online-recovery subsystem
+(``repro.ft.online``: reified sweep state machine + runtime detection +
+host orchestrator). All Comm-generic — the SPMD entrypoints that run them
+under shard_map live in ``repro.launch.spmd_qr``."""
 from repro.ft import driver, elastic, failures, semantics, stragglers
 from repro.ft.driver import FTSweepDriver, FTSweepResult, RecoveryEvent, ft_caqr_sweep
 from repro.ft.failures import (
     FailureSchedule,
     UnrecoverableFailure,
     iter_sweep_points,
+    next_sweep_point,
+    prev_sweep_point,
     sweep_point,
 )
 from repro.ft.semantics import Semantics
+# the online subsystem reuses the driver's REBUILD transitions, so its
+# sibling modules load after the driver (repro.ft.online.__init__ is
+# state-only; this completes the package)
+from repro.ft import online
+from repro.ft.online import detect, orchestrator  # noqa: F401  (wires submodules)
+from repro.ft.online.orchestrator import SweepOrchestrator, ft_caqr_sweep_online
+from repro.ft.online.state import SweepState, initial_sweep_state, sweep_step
 __all__ = [
-    "driver", "elastic", "failures", "semantics", "stragglers", "Semantics",
+    "driver", "elastic", "failures", "online", "semantics", "stragglers",
+    "Semantics",
     "FTSweepDriver", "FTSweepResult", "RecoveryEvent", "ft_caqr_sweep",
     "FailureSchedule", "UnrecoverableFailure", "iter_sweep_points",
-    "sweep_point",
+    "next_sweep_point", "prev_sweep_point", "sweep_point",
+    "SweepOrchestrator", "ft_caqr_sweep_online",
+    "SweepState", "initial_sweep_state", "sweep_step",
 ]

@@ -6,10 +6,16 @@ panel, after any TSQR butterfly level or trailing-combine level — and finish
 with ``R``, the per-panel implicit-Q factors, and the recovery bundles
 **bit-identical** to the failure-free run (the recovery regression oracle).
 
-Execution model (DESIGN.md §8)
-------------------------------
-The driver is ONE Comm-generic program (``repro.core.comm``) that runs two
-ways:
+Execution model (DESIGN.md §8-9)
+--------------------------------
+The sweep itself is the reified state machine of ``repro.ft.online.state``:
+an explicit ``SweepState`` pytree advanced one interruptible point at a time
+by the pure transition ``sweep_step``. This driver is a thin loop over that
+transition that injects *scheduled* (trace-time) failures at each boundary —
+the simulation-convenience path, kept as the differential oracle for the
+*online* path (``repro.ft.online.orchestrator``, where deaths are discovered
+at runtime instead of scripted). Both are ONE Comm-generic program
+(``repro.core.comm``) that runs two ways:
 
 * ``SimComm``  — the P-lane single-device simulator: eager, level-stepped,
   with wall-clock REBUILD latency per event. This is the test/debug path.
@@ -18,16 +24,18 @@ ways:
   is ``repro.launch.spmd_qr.ft_caqr_sweep_spmd``.
 
 Death and recovery are expressed through the Comm death-mask primitives
-(``comm.poison`` / ``comm.fetch_lane`` / ``comm.where_lane``): the schedule
-is static Python data, so "kill lane 2 after panel 1's level-0 trailing
-combine" compiles to a masked NaN-write on both paths, and every REBUILD
-fetch is a point-to-point collective keyed by static lane indices. The
-driver calls the *same* single-level primitives the production sweep is
-built from: ``ft_tsqr_level`` (core/tsqr), ``trailing_combine_level`` and
-``_leaf_apply``/``_writeback`` (core/trailing), and the geometry/assembly
-helpers of ``core/caqr``. Failure-free, the two paths are the same
-floating-point program, so bit-identity holds by construction; under
-failures it is regression-gated by ``tests/test_spmd_ft_driver.py``.
+(``comm.poison`` / ``comm.fetch_lane`` / ``comm.where_lane``) as the two
+``SweepState`` transitions ``obliterate_state`` and ``rebuild_state``
+defined here, shared verbatim by the scheduled and online paths: "kill lane
+2 after panel 1's level-0 trailing combine" compiles to a masked NaN-write
+on both paths, and every REBUILD fetch is a point-to-point collective keyed
+by static lane indices. ``sweep_step`` calls the *same* single-level
+primitives the production sweep is built from: ``ft_tsqr_level``
+(core/tsqr), ``trailing_combine_level`` and ``_leaf_apply``/``_writeback``
+(core/trailing), and the geometry/assembly helpers of ``core/caqr``.
+Failure-free, the paths are the same floating-point program, so bit-identity
+holds by construction; under failures it is regression-gated by
+``tests/test_spmd_ft_driver.py`` and ``tests/test_online_recovery.py``.
 
 Failure model (paper §II, ULFM REBUILD semantics)
 -------------------------------------------------
@@ -70,41 +78,30 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import AbstractSet, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import recovery as rec
-from repro.core.caqr import (
-    PanelFactors,
-    advance_columns,
-    assemble_R,
-    extract_r_rows,
-    lane_geometry,
-    make_panel_factors,
-    pad_bundle,
-    pad_to_geometry,
-    panel_geometry,
-    sweep_geometry,
-)
+from repro.core.caqr import PanelFactors, lane_geometry
 from repro.core.comm import SimComm
-from repro.core.householder import apply_qt, householder_qr_masked
-from repro.core.tsqr import DistTSQRFactors, _levels, ft_tsqr_level
-from repro.core.trailing import (
-    RecoveryBundle,
-    _leaf_apply,
-    _writeback,
-    trailing_combine_level,
-)
+from repro.core.householder import apply_qt
+from repro.core.trailing import RecoveryBundle
+from repro.core.tsqr import _levels
 from repro.ft.failures import (
     Detector,
     FailureSchedule,
-    PHASE_LEAF,
-    PHASE_TRAILING,
     PHASE_TSQR,
+    PHASE_TRAILING,
     UnrecoverableFailure,
-    sweep_point,
+)
+from repro.ft.online.state import (
+    SweepState,
+    finalize,
+    initial_sweep_state,
+    state_lane_axes,
+    sweep_step,
 )
 
 
@@ -138,14 +135,286 @@ class FTSweepResult(NamedTuple):
     events: List[RecoveryEvent]
 
 
+# -- death + REBUILD as SweepState transitions -------------------------------
+#
+# Shared by the scheduled driver below and the online orchestrator
+# (repro.ft.online.orchestrator): process death and single-source recovery
+# are functions of (comm, state), not of the execution mode.
+
+
+def obliterate_state(comm, state: SweepState, lane: int) -> SweepState:
+    """Process death, mask-form: NaN every float the lane holds — current
+    block-row, in-flight panel state, and its slices of all stored sweep
+    outputs (``comm.poison`` — an at-set under SimComm, a masked select on
+    the lane's own device under shard_map). The initial matrix ``A0`` is the
+    re-readable data source of the paper's model and survives."""
+    # A0 survives: mark its axis with the skip sentinel (keeps the axes
+    # pytree structurally identical to the state) so the biggest leaf is
+    # not pointlessly poisoned and re-replaced
+    axes = state_lane_axes(state).replace(A0=-1)
+    return jax.tree_util.tree_map(
+        lambda x, ax: x if ax < 0 else comm.poison(x, lane, lane_axis=ax),
+        state, axes)
+
+
+def recover_lanes(
+    comm,
+    state: SweepState,
+    newly: List[int],
+    point: Tuple[int, str, int],
+    dead: AbstractSet[int],
+    sync=None,
+    on_recovered=None,
+) -> Tuple[SweepState, List[RecoveryEvent]]:
+    """The shared REBUILD protocol: all detected deaths strike first
+    (normalize whatever was observed to the full mask-death), then recovery
+    runs one lane at a time. Both execution modes — the scheduled driver's
+    checkpoint and the online orchestrator's detection handler — call
+    exactly this, so the scheduled-vs-online bitwise equivalence cannot
+    drift apart in one copy.
+
+    ``sync(state)`` (optional) drains async dispatch before/after each
+    rebuild so ``elapsed_s`` covers only the REBUILD itself;
+    ``on_recovered(lane)`` (optional) runs after a lane is rebuilt, before
+    its event is logged — the callers revive their detectors here (which
+    also removes the lane from a live ``dead`` set, keeping later rebuilds'
+    single-source checks honest)."""
+    events: List[RecoveryEvent] = []
+    for lane in newly:
+        state = obliterate_state(comm, state, lane)
+    for lane in newly:
+        if sync is not None:
+            sync(state)
+        t0 = time.perf_counter()
+        state, reads = rebuild_state(comm, state, lane, point, dead)
+        if sync is not None:
+            sync(state)
+        if on_recovered is not None:
+            on_recovered(lane)
+        events.append(RecoveryEvent(
+            point=point, lane=lane, reads=reads,
+            elapsed_s=time.perf_counter() - t0,
+        ))
+    return state, events
+
+
+def rebuild_state(
+    comm,
+    state: SweepState,
+    lane: int,
+    point: Tuple[int, str, int],
+    dead: AbstractSet[int] = frozenset(),
+) -> Tuple[SweepState, Dict[str, int]]:
+    """The paper's REBUILD as a state transition: respawn ``lane`` at the
+    recoverable boundary ``point``, re-read its initial slice, replay
+    completed panels, restore the in-flight panel state — each lost artifact
+    from exactly one surviving buddy. Returns the repaired state and the
+    single-source read ledger. ``dead`` is the set of currently-dead lanes
+    (a needed source in it raises ``UnrecoverableFailure``).
+
+    Comm-generic expression: replay arithmetic runs per lane through
+    ``comm.map_local`` at the dead lane's *static* geometry (under SPMD
+    every lane runs the same program; survivors' replay results are
+    discarded by the final ``where_lane`` masks — under SimComm the vmap
+    computes the same discarded slots), and every buddy read is a
+    ``fetch_lane``/``ppermute`` keyed by static lane indices, so exactly
+    one survivor sends per artifact on the production path too."""
+    geom = state.geom
+    b, m_loc = geom.b, geom.m_loc_pad
+    reads: Dict[str, int] = {}
+
+    def fetch(artifact: str, source: int) -> int:
+        if source == lane or source in dead:
+            raise UnrecoverableFailure(
+                f"rebuilding lane {lane} at {point} needs {artifact} "
+                f"from lane {source}, which is not a live survivor"
+            )
+        reads[artifact] = source
+        return source
+
+    k = point[0]
+    # respawn: every lane re-reads its own slice of the data source; only
+    # the dead lane's replay survives the rebuild's masked writes
+    rows = state.A0
+    for j in range(k):
+        state, rows = _replay_panel(comm, state, j, lane, rows, fetch)
+
+    # current panel: recompute the masked leaf from the rebuilt rows
+    col0, t_lane, rs, act = lane_geometry(k, b, m_loc, lane)
+    lY, lT, lR = comm.map_local(
+        lambda r: rec.recompute_leaf(r, col0, b, rs, act)
+    )(rows)
+    state = state.replace(
+        leaf_Y=comm.where_lane(lane, lY, state.leaf_Y),
+        leaf_T=comm.where_lane(lane, lT, state.leaf_T),
+        R_leaf=comm.where_lane(lane, lR, state.R_leaf),
+        A=comm.where_lane(lane, rows, state.A),
+        window=comm.where_lane(
+            lane, comm.map_local(lambda r: r[:, col0:])(rows), state.window),
+    )
+
+    _, phase, lvl = point
+    if phase == PHASE_TSQR:
+        # ladder + running R: identical at the level-0 buddy (see module
+        # docstring) — one copy restores all completed levels
+        src = fetch("tsqr.ladder+R", lane ^ 1)
+        Y2s, Ts = list(state.Y2s), list(state.Ts)
+        for i in range(lvl + 1):
+            Y2s[i] = comm.fetch_lane(Y2s[i], lane, src)
+            Ts[i] = comm.fetch_lane(Ts[i], lane, src)
+        state = state.replace(
+            Y2s=tuple(Y2s), Ts=tuple(Ts),
+            R_carry=comm.fetch_lane(state.R_carry, lane, src),
+        )
+    elif phase == PHASE_TRAILING:
+        src = fetch("tsqr.ladder", lane ^ 1)
+        level_Y2 = comm.fetch_lane(state.level_Y2, lane, src, lane_axis=1)
+        level_T = comm.fetch_lane(state.level_T, lane, src, lane_axis=1)
+        # the per-level ladder tuple and the running tsqr R ride along from
+        # the same survivor: no sweep output reads them after the stacking,
+        # but a respawned lane must hold NO stale NaN — the online
+        # detectors (sentinel probe, deep scan) rely on a rebuilt lane
+        # being indistinguishable from one that never died
+        Y2s, Ts = list(state.Y2s), list(state.Ts)
+        for i in range(len(Y2s)):
+            Y2s[i] = comm.fetch_lane(Y2s[i], lane, src)
+            Ts[i] = comm.fetch_lane(Ts[i], lane, src)
+        state = state.replace(Y2s=tuple(Y2s), Ts=tuple(Ts))
+        if state.R_carry is not None:
+            state = state.replace(
+                R_carry=comm.fetch_lane(state.R_carry, lane, src))
+        # leaf-applied window: local recompute through the same seam
+        C_local = comm.where_lane(
+            lane,
+            comm.map_local(
+                lambda Y, T, r: apply_qt(Y, T, r[:, col0:])
+            )(lY, lT, rows),
+            state.C_local,
+        )
+        # C' after the last completed level: ONE fetch from that level's
+        # buddy, replayed through the seam-routed pair combine
+        src_c = fetch(f"trailing.cprime@level{lvl}", lane ^ (1 << lvl))
+        failed_was_top = ((lane >> lvl) & 1) == ((t_lane >> lvl) & 1)
+        pair_live = lane >= t_lane and src_c >= t_lane
+        recv = lambda x: comm.ppermute(x, [(src_c, lane)])
+        cp = comm.map_local(
+            lambda cb, cs, y2, t: rec.rebuild_cprime_after_level(
+                cb, cs, y2, t, failed_was_top, pair_live)
+        )(recv(state.Cs_buddy[lvl]), recv(state.Cs_self[lvl]),
+          level_Y2[lvl], level_T[lvl])
+        C_prime = comm.where_lane(lane, cp, state.C_prime)
+        # the lane's own bundle rows: mirror of each level-buddy's entry
+        # (W is pair-shared; C_self/C_buddy swap sides)
+        Ws = list(state.Ws)
+        Cs_self, Cs_buddy = list(state.Cs_self), list(state.Cs_buddy)
+        for s in range(lvl + 1):
+            src_s = fetch(f"trailing.bundle@level{s}", lane ^ (1 << s))
+            new_w = comm.fetch_lane(Ws[s], lane, src_s)
+            new_cs = comm.fetch_lane(
+                Cs_buddy[s], lane, src_s, into=Cs_self[s])
+            new_cb = comm.fetch_lane(
+                Cs_self[s], lane, src_s, into=Cs_buddy[s])
+            Ws[s], Cs_self[s], Cs_buddy[s] = new_w, new_cs, new_cb
+        state = state.replace(
+            level_Y2=level_Y2, level_T=level_T, C_local=C_local,
+            C_prime=C_prime, Ws=tuple(Ws),
+            Cs_self=tuple(Cs_self), Cs_buddy=tuple(Cs_buddy),
+        )
+    return state, reads
+
+
+def _replay_panel(
+    comm, state: SweepState, j: int, lane: int, rows, fetch
+) -> Tuple[SweepState, jax.Array]:
+    """Advance the respawned lane's block-row through completed panel ``j``
+    and restore its slices of that panel's stored outputs."""
+    geom = state.geom
+    b, m_loc, L = geom.b, geom.m_loc_pad, geom.levels
+    col0, t_lane, rs, act = lane_geometry(j, b, m_loc, lane)
+    lY, lT, _lR = comm.map_local(
+        lambda r: rec.recompute_leaf(r, col0, b, rs, act)
+    )(rows)
+
+    src_l = fetch(f"panel{j}.tsqr_ladder", lane ^ 1)
+    factors = list(state.factors)
+    fj = factors[j]
+    factors[j] = PanelFactors(
+        leaf_Y=comm.where_lane(lane, lY, fj.leaf_Y),
+        leaf_T=comm.where_lane(lane, lT, fj.leaf_T),
+        level_Y2=comm.fetch_lane(fj.level_Y2, lane, src_l, lane_axis=1),
+        level_T=comm.fetch_lane(fj.level_T, lane, src_l, lane_axis=1),
+        row_start=fj.row_start, active=fj.active, target=fj.target,
+    )
+    src_r = fetch(f"panel{j}.r_rows", lane ^ 1)
+    R_rows = list(state.R_rows)
+    R_rows[j] = comm.fetch_lane(R_rows[j], lane, src_r)
+
+    # final C' of panel j: one fetch from the last-level buddy's bundle.
+    # Indexing the leading LEVEL axis first leaves per-lane layout on
+    # both comms (SimComm keeps the lane axis in front, AxisComm is
+    # already local), so the replayed combine is one expression.
+    bj = state.bundles[j]
+    if act:
+        src_c = fetch(f"panel{j}.cprime_final", lane ^ (1 << (L - 1)))
+        failed_was_top = ((lane >> (L - 1)) & 1) == ((t_lane >> (L - 1)) & 1)
+        pair_live = lane >= t_lane and (lane ^ (1 << (L - 1))) >= t_lane
+        recv = lambda x: comm.ppermute(x, [(src_c, lane)])
+        # stored bundles are zero-padded to full width; slice back to the
+        # live window so the replayed combine runs at the original width
+        cp = comm.map_local(
+            lambda cb, cs, y2, t: rec.rebuild_cprime_after_level(
+                cb, cs, y2, t, failed_was_top, pair_live)
+        )(recv(bj.C_buddy[L - 1][..., col0:]),
+          recv(bj.C_self[L - 1][..., col0:]),
+          recv(bj.Y2[L - 1]), recv(bj.T[L - 1]))
+        rows = comm.map_local(
+            lambda r, y, t, c: rec.rebuild_block_row_through_panel(
+                r, y, t, c, col0, rs, act)
+        )(rows, lY, lT, cp)
+    else:
+        rows = comm.map_local(
+            lambda r, y, t: rec.rebuild_block_row_through_panel(
+                r, y, t, None, col0, rs, act)
+        )(rows, lY, lT)
+
+    # the lane's own bundle rows for panel j: per-level mirrors, written
+    # level-sliced (leading axis) and re-stacked so the same code drives
+    # both comm layouts
+    W_lv = [bj.W[s] for s in range(L)]
+    Cs_lv = [bj.C_self[s] for s in range(L)]
+    Cb_lv = [bj.C_buddy[s] for s in range(L)]
+    for s in range(L):
+        src_s = fetch(f"panel{j}.bundle@level{s}", lane ^ (1 << s))
+        W_lv[s] = comm.fetch_lane(bj.W[s], lane, src_s)
+        Cs_lv[s] = comm.fetch_lane(bj.C_buddy[s], lane, src_s, into=Cs_lv[s])
+        Cb_lv[s] = comm.fetch_lane(bj.C_self[s], lane, src_s, into=Cb_lv[s])
+    bundles = list(state.bundles)
+    bundles[j] = RecoveryBundle(
+        W=jnp.stack(W_lv), C_self=jnp.stack(Cs_lv), C_buddy=jnp.stack(Cb_lv),
+        Y2=comm.fetch_lane(bj.Y2, lane, src_l, lane_axis=1),
+        T=comm.fetch_lane(bj.T, lane, src_l, lane_axis=1),
+        self_was_top=bj.self_was_top,
+    )
+    state = state.replace(
+        factors=tuple(factors), R_rows=tuple(R_rows), bundles=tuple(bundles))
+    return state, rows
+
+
+# -- the scheduled (trace-time) driver ---------------------------------------
+
+
 class FTSweepDriver:
     """Level-stepped windowed CAQR sweep with failure injection + REBUILD.
 
-    Comm-generic (paper §II execution model; DESIGN.md §8): under ``SimComm``
-    lanes are simulator slices of single-device arrays; under ``AxisComm``
-    (inside ``shard_map``) each lane is a real device and every kill/fetch
-    is a masked collective. The two paths run the same floating-point
-    program and produce bit-identical results.
+    A thin loop over the reified state machine: each iteration runs
+    ``repro.ft.online.state.sweep_step`` (one sweep point), then fires the
+    scheduled deaths of the just-completed point and repairs them with
+    ``obliterate_state`` / ``rebuild_state``. Comm-generic (paper §II
+    execution model; DESIGN.md §8): under ``SimComm`` lanes are simulator
+    slices of single-device arrays; under ``AxisComm`` (inside
+    ``shard_map``) each lane is a real device and every kill/fetch is a
+    masked collective. The two paths run the same floating-point program
+    and produce bit-identical results.
 
     ``A0`` is the initial matrix — SimComm layout ``(P, m_loc, n)``, per-lane
     ``(m_loc, n)`` under AxisComm — and doubles as the re-readable data
@@ -175,338 +444,40 @@ class FTSweepDriver:
         self.levels = _levels(self.P)
         assert self.levels >= 1, "need at least 2 lanes to tolerate failures"
         self.b = panel_width
-        m_loc, n = comm.local_shape(A0)
-        self.geom = sweep_geometry(self.P, m_loc, n, self.b)
-        # the sweep (and every REBUILD replay) runs at the padded geometry
-        self.m_loc, self.n = self.geom.m_loc_pad, self.geom.n_work
-        self.n_panels = self.geom.n_panels
-        self.A0 = pad_to_geometry(comm, A0, self.geom)
-        self.A = self.A0
+        self.state = initial_sweep_state(comm, A0, panel_width)
+        self.geom = self.state.geom
         self.detector = detector or Detector(self.P, schedule)
-        # stored sweep outputs, one entry per completed panel
-        self.factors: List[PanelFactors] = []
-        self.R_rows: List[jax.Array] = []
-        self.bundles: List[RecoveryBundle] = []
         self.events: List[RecoveryEvent] = []
 
     # -- sweep -------------------------------------------------------------
 
     def run(self) -> FTSweepResult:
-        for k in range(self.n_panels):
-            self._run_panel(k)
-        factors = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.factors)
-        bundles = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.bundles)
-        R = assemble_R(self.comm, jnp.stack(self.R_rows), self.geom)
+        while self.state.cursor is not None:
+            point = self.state.cursor
+            self.state = sweep_step(self.comm, self.state)
+            self._checkpoint(point)
+        R, factors, bundles = finalize(self.comm, self.state)
         return FTSweepResult(R=R, factors=factors, bundles=bundles,
                              events=self.events)
-
-    def _run_panel(self, k: int) -> None:
-        comm, b = self.comm, self.b
-        col0, t_lane, row_start, active = panel_geometry(comm, k, b, self.m_loc)
-        self._k, self._col0, self._t_lane = k, col0, t_lane
-        # in-flight per-panel state (what a mid-panel death obliterates)
-        self._window = comm.map_local(lambda A: A[:, col0:])(self.A)
-        self._R_carry = None
-        self._Y2s: List[jax.Array] = []
-        self._Ts: List[jax.Array] = []
-        self._level_Y2 = self._level_T = None
-        self._C_local = self._C_prime = None
-        self._Ws: List[jax.Array] = []
-        self._Cs_self: List[jax.Array] = []
-        self._Cs_buddy: List[jax.Array] = []
-        self._tops: List[jax.Array] = []
-
-        # leaf: local masked panel QR
-        panel = comm.map_local(lambda W: W[:, :b])(self._window)
-        wy = comm.map_local(householder_qr_masked)(panel, row_start)
-        self._leaf_Y = comm.where(active, wy.Y, jnp.zeros_like(wy.Y))
-        self._leaf_T = comm.where(active, wy.T, jnp.zeros_like(wy.T))
-        self._R_leaf = comm.where(active, wy.R, jnp.zeros_like(wy.R))
-        self._checkpoint(sweep_point(k, PHASE_LEAF))
-
-        # FT-TSQR butterfly, one checkpoint per level
-        self._R_carry = self._R_leaf
-        for s in range(self.levels):
-            R_next, Y2, T = ft_tsqr_level(comm, self._R_carry, s, t_lane, t_lane)
-            self._R_carry = R_next
-            self._Y2s.append(Y2)
-            self._Ts.append(T)
-            self._checkpoint(sweep_point(k, PHASE_TSQR, s))
-        self._level_Y2 = jnp.stack(self._Y2s)
-        self._level_T = jnp.stack(self._Ts)
-
-        # trailing update (Algorithm 2), one checkpoint per level
-        dist = DistTSQRFactors(self._leaf_Y, self._leaf_T, self._level_Y2,
-                               self._level_T, self._R_leaf)
-        C_local, C_prime = _leaf_apply(comm, dist, self._window, row_start,
-                                       active=active, skip_consumed=True)
-        self._C_local = C_local
-        self._C_prime = comm.where(active, C_prime, jnp.zeros_like(C_prime))
-        for s in range(self.levels):
-            out = trailing_combine_level(
-                comm, self._C_prime, self._level_Y2[s], self._level_T[s],
-                s, t_lane, t_lane,
-            )
-            self._Ws.append(out.W)
-            self._Cs_self.append(out.C_self)
-            self._Cs_buddy.append(out.C_buddy)
-            self._tops.append(out.is_top)
-            self._C_prime = out.C_prime
-            self._checkpoint(sweep_point(k, PHASE_TRAILING, s))
-
-        # writeback + panel outputs (the windowed sweep's own deposit helpers)
-        C_out = _writeback(comm, self._C_local, self._C_prime, row_start, active)
-        self.A = advance_columns(comm, self.A, C_out, col0)
-        self.R_rows.append(extract_r_rows(comm, self._C_prime, t_lane, col0))
-        self.bundles.append(pad_bundle(RecoveryBundle(
-            W=jnp.stack(self._Ws),
-            C_self=jnp.stack(self._Cs_self),
-            C_buddy=jnp.stack(self._Cs_buddy),
-            Y2=self._level_Y2,
-            T=self._level_T,
-            self_was_top=jnp.stack(self._tops),
-        ), col0))
-        self.factors.append(make_panel_factors(
-            comm, self._leaf_Y, self._leaf_T, self._level_Y2, self._level_T,
-            row_start, active, t_lane,
-        ))
 
     # -- failure injection + REBUILD ---------------------------------------
 
     def _checkpoint(self, point: Tuple[int, str, int]) -> None:
         newly = self.detector.begin_step(point)
-        for lane in newly:          # all deaths at this point strike first,
-            self._obliterate(lane)  # then recovery runs one lane at a time
-        for lane in newly:
-            # drain the async-dispatched sweep prefix first, so the latency
-            # clock covers only the REBUILD itself (then everything the
-            # rebuild patched); no-op under tracing
-            if self._eager:
-                self._sync()
-            t0 = time.perf_counter()
-            reads = self._rebuild(lane, point)
-            if self._eager:
-                self._sync()
-            self.detector.revive(lane)
-            self.events.append(RecoveryEvent(
-                point=point, lane=lane, reads=reads,
-                elapsed_s=time.perf_counter() - t0,
-            ))
-
-    def _sync(self) -> None:
-        jax.block_until_ready([
-            x for x in (
-                self.A, self._window, self._leaf_Y, self._leaf_T,
-                self._R_leaf, self._R_carry, self._level_Y2, self._level_T,
-                self._C_local, self._C_prime,
-                *self._Y2s, *self._Ts, *self._Ws, *self._Cs_self,
-                *self._Cs_buddy, *self.factors, *self.bundles, *self.R_rows,
-            ) if x is not None
-        ])
-
-    def _obliterate(self, lane: int) -> None:
-        """Process death, mask-form: NaN every float the lane holds — current
-        block-row, in-flight panel state, and its slices of all stored sweep
-        outputs (``comm.poison`` — an at-set under SimComm, a masked select
-        on the lane's own device under shard_map)."""
-        poison = self.comm.poison
-        self.A = poison(self.A, lane)
-        self._window = poison(self._window, lane)
-        self._leaf_Y = poison(self._leaf_Y, lane)
-        self._leaf_T = poison(self._leaf_T, lane)
-        self._R_leaf = poison(self._R_leaf, lane)
-        if self._R_carry is not None:
-            self._R_carry = poison(self._R_carry, lane)
-        self._Y2s = [poison(x, lane) for x in self._Y2s]
-        self._Ts = [poison(x, lane) for x in self._Ts]
-        if self._level_Y2 is not None:
-            self._level_Y2 = poison(self._level_Y2, lane, lane_axis=1)
-            self._level_T = poison(self._level_T, lane, lane_axis=1)
-        if self._C_local is not None:
-            self._C_local = poison(self._C_local, lane)
-            self._C_prime = poison(self._C_prime, lane)
-        self._Ws = [poison(x, lane) for x in self._Ws]
-        self._Cs_self = [poison(x, lane) for x in self._Cs_self]
-        self._Cs_buddy = [poison(x, lane) for x in self._Cs_buddy]
-        for j in range(len(self.factors)):
-            fj = self.factors[j]
-            self.factors[j] = PanelFactors(
-                leaf_Y=poison(fj.leaf_Y, lane),
-                leaf_T=poison(fj.leaf_T, lane),
-                level_Y2=poison(fj.level_Y2, lane, lane_axis=1),
-                level_T=poison(fj.level_T, lane, lane_axis=1),
-                row_start=fj.row_start, active=fj.active, target=fj.target,
-            )
-            bj = self.bundles[j]
-            self.bundles[j] = RecoveryBundle(
-                W=poison(bj.W, lane, lane_axis=1),
-                C_self=poison(bj.C_self, lane, lane_axis=1),
-                C_buddy=poison(bj.C_buddy, lane, lane_axis=1),
-                Y2=poison(bj.Y2, lane, lane_axis=1),
-                T=poison(bj.T, lane, lane_axis=1),
-                self_was_top=bj.self_was_top,
-            )
-            self.R_rows[j] = poison(self.R_rows[j], lane)
-
-    def _rebuild(self, lane: int, point: Tuple[int, str, int]) -> Dict[str, int]:
-        """The paper's REBUILD: respawn ``lane``, re-read its initial slice,
-        replay completed panels, restore the in-flight panel state — each
-        lost artifact from exactly one surviving buddy.
-
-        Comm-generic expression: replay arithmetic runs per lane through
-        ``comm.map_local`` at the dead lane's *static* geometry (under SPMD
-        every lane runs the same program; survivors' replay results are
-        discarded by the final ``where_lane`` masks — under SimComm the vmap
-        computes the same discarded slots), and every buddy read is a
-        ``fetch_lane``/``ppermute`` keyed by static lane indices, so exactly
-        one survivor sends per artifact on the production path too."""
-        comm = self.comm
-        reads: Dict[str, int] = {}
-
-        def fetch(artifact: str, source: int) -> int:
-            if source == lane or source in self.detector.dead:
-                raise UnrecoverableFailure(
-                    f"rebuilding lane {lane} at {point} needs {artifact} "
-                    f"from lane {source}, which is not a live survivor"
-                )
-            reads[artifact] = source
-            return source
-
-        k = self._k
-        # respawn: every lane re-reads its own slice of the data source; only
-        # the dead lane's replay survives the rebuild's masked writes
-        rows = self.A0
-        for j in range(k):
-            rows = self._replay_panel(j, lane, rows, fetch)
-
-        # current panel: recompute the masked leaf from the rebuilt rows
-        col0, t_lane, rs, act = lane_geometry(k, self.b, self.m_loc, lane)
-        lY, lT, lR = comm.map_local(
-            lambda r: rec.recompute_leaf(r, col0, self.b, rs, act)
-        )(rows)
-        self._leaf_Y = comm.where_lane(lane, lY, self._leaf_Y)
-        self._leaf_T = comm.where_lane(lane, lT, self._leaf_T)
-        self._R_leaf = comm.where_lane(lane, lR, self._R_leaf)
-        self.A = comm.where_lane(lane, rows, self.A)
-        self._window = comm.where_lane(
-            lane, comm.map_local(lambda r: r[:, col0:])(rows), self._window
+        if not newly:
+            return
+        # the sync drains the async-dispatched sweep prefix so the latency
+        # clock covers only each REBUILD itself; no-op under tracing
+        sync = _block_on_state if self._eager else None
+        self.state, events = recover_lanes(
+            self.comm, self.state, newly, point, self.detector.dead,
+            sync=sync, on_recovered=self.detector.revive,
         )
+        self.events.extend(events)
 
-        _, phase, lvl = point
-        if phase == PHASE_TSQR:
-            # ladder + running R: identical at the level-0 buddy (see module
-            # docstring) — one copy restores all completed levels
-            src = fetch("tsqr.ladder+R", lane ^ 1)
-            for i in range(lvl + 1):
-                self._Y2s[i] = comm.fetch_lane(self._Y2s[i], lane, src)
-                self._Ts[i] = comm.fetch_lane(self._Ts[i], lane, src)
-            self._R_carry = comm.fetch_lane(self._R_carry, lane, src)
-        elif phase == PHASE_TRAILING:
-            src = fetch("tsqr.ladder", lane ^ 1)
-            self._level_Y2 = comm.fetch_lane(
-                self._level_Y2, lane, src, lane_axis=1)
-            self._level_T = comm.fetch_lane(
-                self._level_T, lane, src, lane_axis=1)
-            # leaf-applied window: local recompute through the same seam
-            self._C_local = comm.where_lane(
-                lane,
-                comm.map_local(
-                    lambda Y, T, r: apply_qt(Y, T, r[:, col0:])
-                )(lY, lT, rows),
-                self._C_local,
-            )
-            # C' after the last completed level: ONE fetch from that level's
-            # buddy, replayed through the seam-routed pair combine
-            src_c = fetch(f"trailing.cprime@level{lvl}", lane ^ (1 << lvl))
-            failed_was_top = ((lane >> lvl) & 1) == ((t_lane >> lvl) & 1)
-            pair_live = lane >= t_lane and src_c >= t_lane
-            recv = lambda x: comm.ppermute(x, [(src_c, lane)])
-            cp = comm.map_local(
-                lambda cb, cs, y2, t: rec.rebuild_cprime_after_level(
-                    cb, cs, y2, t, failed_was_top, pair_live)
-            )(recv(self._Cs_buddy[lvl]), recv(self._Cs_self[lvl]),
-              self._level_Y2[lvl], self._level_T[lvl])
-            self._C_prime = comm.where_lane(lane, cp, self._C_prime)
-            # the lane's own bundle rows: mirror of each level-buddy's entry
-            # (W is pair-shared; C_self/C_buddy swap sides)
-            for s in range(lvl + 1):
-                src_s = fetch(f"trailing.bundle@level{s}", lane ^ (1 << s))
-                new_w = comm.fetch_lane(self._Ws[s], lane, src_s)
-                new_cs = comm.fetch_lane(
-                    self._Cs_buddy[s], lane, src_s, into=self._Cs_self[s])
-                new_cb = comm.fetch_lane(
-                    self._Cs_self[s], lane, src_s, into=self._Cs_buddy[s])
-                self._Ws[s], self._Cs_self[s], self._Cs_buddy[s] = (
-                    new_w, new_cs, new_cb)
-        return reads
 
-    def _replay_panel(self, j: int, lane: int, rows: jax.Array, fetch) -> jax.Array:
-        """Advance the respawned lane's block-row through completed panel
-        ``j`` and restore its slices of that panel's stored outputs."""
-        comm, L = self.comm, self.levels
-        col0, t_lane, rs, act = lane_geometry(j, self.b, self.m_loc, lane)
-        lY, lT, _lR = comm.map_local(
-            lambda r: rec.recompute_leaf(r, col0, self.b, rs, act)
-        )(rows)
-
-        src_l = fetch(f"panel{j}.tsqr_ladder", lane ^ 1)
-        fj = self.factors[j]
-        self.factors[j] = PanelFactors(
-            leaf_Y=comm.where_lane(lane, lY, fj.leaf_Y),
-            leaf_T=comm.where_lane(lane, lT, fj.leaf_T),
-            level_Y2=comm.fetch_lane(fj.level_Y2, lane, src_l, lane_axis=1),
-            level_T=comm.fetch_lane(fj.level_T, lane, src_l, lane_axis=1),
-            row_start=fj.row_start, active=fj.active, target=fj.target,
-        )
-        src_r = fetch(f"panel{j}.r_rows", lane ^ 1)
-        self.R_rows[j] = comm.fetch_lane(self.R_rows[j], lane, src_r)
-
-        # final C' of panel j: one fetch from the last-level buddy's bundle.
-        # Indexing the leading LEVEL axis first leaves per-lane layout on
-        # both comms (SimComm keeps the lane axis in front, AxisComm is
-        # already local), so the replayed combine is one expression.
-        bj = self.bundles[j]
-        if act:
-            src_c = fetch(f"panel{j}.cprime_final", lane ^ (1 << (L - 1)))
-            failed_was_top = ((lane >> (L - 1)) & 1) == ((t_lane >> (L - 1)) & 1)
-            pair_live = lane >= t_lane and (lane ^ (1 << (L - 1))) >= t_lane
-            recv = lambda x: comm.ppermute(x, [(src_c, lane)])
-            # stored bundles are zero-padded to full width; slice back to the
-            # live window so the replayed combine runs at the original width
-            cp = comm.map_local(
-                lambda cb, cs, y2, t: rec.rebuild_cprime_after_level(
-                    cb, cs, y2, t, failed_was_top, pair_live)
-            )(recv(bj.C_buddy[L - 1][..., col0:]),
-              recv(bj.C_self[L - 1][..., col0:]),
-              recv(bj.Y2[L - 1]), recv(bj.T[L - 1]))
-            rows = comm.map_local(
-                lambda r, y, t, c: rec.rebuild_block_row_through_panel(
-                    r, y, t, c, col0, rs, act)
-            )(rows, lY, lT, cp)
-        else:
-            rows = comm.map_local(
-                lambda r, y, t: rec.rebuild_block_row_through_panel(
-                    r, y, t, None, col0, rs, act)
-            )(rows, lY, lT)
-
-        # the lane's own bundle rows for panel j: per-level mirrors, written
-        # level-sliced (leading axis) and re-stacked so the same code drives
-        # both comm layouts
-        W_lv = [bj.W[s] for s in range(L)]
-        Cs_lv = [bj.C_self[s] for s in range(L)]
-        Cb_lv = [bj.C_buddy[s] for s in range(L)]
-        for s in range(L):
-            src_s = fetch(f"panel{j}.bundle@level{s}", lane ^ (1 << s))
-            W_lv[s] = comm.fetch_lane(bj.W[s], lane, src_s)
-            Cs_lv[s] = comm.fetch_lane(bj.C_buddy[s], lane, src_s, into=Cs_lv[s])
-            Cb_lv[s] = comm.fetch_lane(bj.C_self[s], lane, src_s, into=Cb_lv[s])
-        self.bundles[j] = RecoveryBundle(
-            W=jnp.stack(W_lv), C_self=jnp.stack(Cs_lv), C_buddy=jnp.stack(Cb_lv),
-            Y2=comm.fetch_lane(bj.Y2, lane, src_l, lane_axis=1),
-            T=comm.fetch_lane(bj.T, lane, src_l, lane_axis=1),
-            self_was_top=bj.self_was_top,
-        )
-        return rows
+def _block_on_state(state: SweepState) -> None:
+    jax.block_until_ready(jax.tree_util.tree_leaves(state))
 
 
 def ft_caqr_sweep(
@@ -526,7 +497,10 @@ def ft_caqr_sweep(
     ``comm`` selects the execution: ``SimComm(P)`` for the single-device
     simulator, ``AxisComm(axis)`` inside ``shard_map`` for the production
     SPMD path (use ``repro.launch.spmd_qr.ft_caqr_sweep_spmd`` which wires
-    the mesh and output layouts).
+    the mesh and output layouts). For *runtime-detected* (unscripted)
+    failures, use the online orchestrator
+    (``repro.ft.online.orchestrator.SweepOrchestrator``), which drives the
+    same state machine.
 
     Example (simulator; kill lane 1 after panel 0's level-0 trailing
     combine, recover, and match the failure-free sweep bit for bit):

@@ -1,9 +1,12 @@
-"""Failure injection + detection simulation.
+"""Failure injection + detection simulation (the trace-time path).
 
 ``FailureSchedule`` scripts lane deaths at given steps (tests/examples);
 ``Detector`` models ULFM semantics: an operation touching a failed lane
 raises ``LaneFailure`` — operations not involving it proceed unknowingly
-(paper §II last paragraph).
+(paper §II last paragraph). Runtime (unscripted) detection lives in
+``repro.ft.online.detect``; the sweep-point address arithmetic below
+(``next_sweep_point`` / ``prev_sweep_point``) is shared by both paths as
+the cursor algebra of the reified state machine.
 
 Steps are arbitrary hashable addresses. The training loop uses plain int
 step counters; the FT-CAQR sweep driver (``repro.ft.driver``) uses
@@ -66,6 +69,65 @@ def iter_sweep_points(n_panels: int, levels: int):
             yield sweep_point(k, PHASE_TSQR, s)
         for s in range(levels):
             yield sweep_point(k, PHASE_TRAILING, s)
+
+
+def next_sweep_point(
+    point: Tuple[int, str, int], n_panels: int, levels: int
+) -> Optional[Tuple[int, str, int]]:
+    """Successor of ``point`` in driver execution order, ``None`` after the
+    last point — the cursor advance of the reified sweep state machine
+    (``repro.ft.online.state``).
+
+    >>> next_sweep_point((0, "leaf", 0), 2, 2)
+    (0, 'tsqr', 0)
+    >>> next_sweep_point((0, "trailing", 1), 2, 2)
+    (1, 'leaf', 0)
+    >>> next_sweep_point((1, "trailing", 1), 2, 2) is None
+    True
+    """
+    k, phase, s = point
+    if phase == PHASE_LEAF:
+        return sweep_point(k, PHASE_TSQR, 0)
+    if phase == PHASE_TSQR:
+        if s + 1 < levels:
+            return sweep_point(k, PHASE_TSQR, s + 1)
+        return sweep_point(k, PHASE_TRAILING, 0)
+    if s + 1 < levels:
+        return sweep_point(k, PHASE_TRAILING, s + 1)
+    if k + 1 < n_panels:
+        return sweep_point(k + 1, PHASE_LEAF)
+    return None
+
+
+def prev_sweep_point(
+    point: Optional[Tuple[int, str, int]], n_panels: int, levels: int
+) -> Optional[Tuple[int, str, int]]:
+    """Predecessor of ``point`` (``None`` = past-the-end, i.e. the last
+    point); ``None`` for the very first point. The orchestrator uses this to
+    name the just-completed recoverable boundary a runtime-detected death is
+    attributed to.
+
+    >>> prev_sweep_point((0, "tsqr", 0), 2, 2)
+    (0, 'leaf', 0)
+    >>> prev_sweep_point(None, 2, 2)
+    (1, 'trailing', 1)
+    >>> prev_sweep_point((0, "leaf", 0), 2, 2) is None
+    True
+    """
+    if point is None:
+        return sweep_point(n_panels - 1, PHASE_TRAILING, max(levels - 1, 0))
+    k, phase, s = point
+    if phase == PHASE_LEAF:
+        if k == 0:
+            return None
+        return sweep_point(k - 1, PHASE_TRAILING, max(levels - 1, 0))
+    if phase == PHASE_TSQR:
+        if s == 0:
+            return sweep_point(k, PHASE_LEAF)
+        return sweep_point(k, PHASE_TSQR, s - 1)
+    if s == 0:
+        return sweep_point(k, PHASE_TSQR, max(levels - 1, 0))
+    return sweep_point(k, PHASE_TRAILING, s - 1)
 
 
 class LaneFailure(RuntimeError):

@@ -1,0 +1,35 @@
+"""Online recovery: the reified sweep state machine, runtime failure
+detection, and the host-side orchestrator (DESIGN.md §9).
+
+``state``        — ``SweepState`` + the pure ``sweep_step`` transition (and
+                   the host wire format used by ``repro.ckpt``).
+``detect``       — runtime failure detectors (NaN-sentinel probe, injectable
+                   fail-stop doubles) and fault injectors for tests/demos.
+``orchestrator`` — the host loop: compiled ``sweep_step`` segments, detector
+                   polls between segments, REBUILD synthesis for whatever
+                   the detector found, diskless persistence hooks.
+
+Only ``state`` is imported here: ``repro.ft.driver`` is a loop over
+``state.sweep_step`` while ``orchestrator`` reuses the driver's
+obliterate/REBUILD transitions, so the sibling modules are wired up by
+``repro.ft.__init__`` after the driver exists (keeps the import graph
+acyclic).
+"""
+from repro.ft.online import state
+from repro.ft.online.state import (
+    SweepState,
+    finalize,
+    initial_sweep_state,
+    run_steps,
+    state_lane_axes,
+    sweep_state_from_host,
+    sweep_state_to_host,
+    sweep_step,
+)
+
+__all__ = [
+    "detect", "orchestrator", "state",
+    "SweepState", "finalize", "initial_sweep_state", "run_steps",
+    "state_lane_axes", "sweep_state_from_host", "sweep_state_to_host",
+    "sweep_step",
+]

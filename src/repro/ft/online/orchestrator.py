@@ -1,0 +1,263 @@
+"""Host-side orchestrator: compiled sweep segments + runtime recovery.
+
+This inverts the control flow of the scheduled FT path (DESIGN.md §9): the
+sweep no longer runs as one traced program with a baked-in
+``FailureSchedule`` — the host loops over *compiled segments* of the
+reified state machine (``repro.ft.online.state.sweep_step``), and between
+segments it
+
+1. runs the registered **fault hooks** (test/demo injectors — in production
+   the faults are real and this list is empty),
+2. **polls the detector** (``repro.ft.online.detect``) — deaths are
+   discovered, never scripted,
+3. synthesizes the **REBUILD** for whatever was found, with the same
+   ``obliterate_state`` / ``rebuild_state`` transitions the scheduled
+   driver uses (one ``RecoveryEvent`` per death, single-source ledger and
+   all), attributed to the just-completed sweep point,
+4. optionally **persists** the state (diskless snapshot store or any
+   ``push(state)`` callable) so an orchestrator killed mid-sweep can be
+   resumed from the last boundary (``SweepOrchestrator.from_state``).
+
+Because a boundary state is bit-identical to the monolithic driver's
+checkpoint state, a death detected at the boundary after point ``p``
+recovers into exactly the state a trace-time ``FailureSchedule({p: [lane]})``
+run has after its REBUILD — the scheduled path stays the differential
+oracle for the online path (``tests/test_online_recovery.py``).
+
+Detection latency: the NaN-sentinel probe catches a death at the first
+boundary after it happens — at most one segment late. A missed poll (a
+detector false-negative) is still recoverable as long as the dead lane's
+state has not crossed into a survivor through a collective: the intervening
+segment must be lane-local for the dead lane (a ``leaf`` segment, or any
+segment where the dead lane is not the panel's deposit root). The
+one-segment-late case is regression-tested; longer blindness can
+contaminate survivors and then honestly fails the NaN oracle.
+
+Execution backends: under ``SimComm`` segments are jitted directly; for the
+production SPMD path pass ``step_fn=`` a shard_map segment runner
+(``repro.launch.spmd_qr.make_spmd_sweep_step``) — the state then lives as
+global lane-sharded arrays between segments and all host-side death/REBUILD
+masking runs through the SimComm primitives on the identical global layout.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.comm import SimComm
+from repro.ft.driver import FTSweepResult, RecoveryEvent, recover_lanes
+from repro.ft.failures import LaneFailure, prev_sweep_point
+from repro.ft.online.detect import NaNSentinelDetector, OnlineDetector
+from repro.ft.online.state import (
+    SweepState,
+    finalize,
+    initial_sweep_state,
+    run_steps,
+)
+from repro.ft.semantics import Semantics
+
+# One jitted segment runner per (comm, segment size); jax's own cache then
+# specializes per state treedef (= per cursor), so every orchestrator over
+# the same geometry shares compiled segments.
+_SEGMENT_CACHE: Dict[Tuple, Callable] = {}
+
+FaultHook = Callable[[object, SweepState], SweepState]
+
+
+class SweepOrchestrator:
+    """Run the FT-CAQR sweep as host-controlled segments with runtime
+    failure detection and REBUILD (the paper's online execution model).
+
+    Parameters
+    ----------
+    A0, comm, panel_width:
+        As ``ft_caqr_sweep`` — any general shape, SimComm layout
+        ``(P, m_loc, n)``. (Omit and use :meth:`from_state` to resume a
+        persisted mid-sweep state instead.)
+    detector:
+        ``OnlineDetector`` polled at every boundary (default: the
+        NaN-sentinel probe).
+    segment_points:
+        Sweep points per compiled segment (>= 1). Larger segments amortize
+        host/dispatch overhead but widen the detection-latency window —
+        ``benchmarks/bench_online.py`` measures the tradeoff.
+    jit_segments:
+        Compile segments with ``jax.jit`` (default). ``False`` runs them
+        eagerly — slower, handy for debugging.
+    step_fn:
+        Optional external segment backend, called as ``step_fn(state) ->
+        state`` once per sweep point: the SPMD path passes the shard_map
+        runner from ``repro.launch.spmd_qr.make_spmd_sweep_step``.
+    fault_hooks:
+        Callables ``hook(comm, state) -> state`` run at every boundary
+        *before* the detector poll — test/demo fault injectors
+        (``ScriptedKiller``, ``WallClockKiller``).
+    store, persist_every:
+        If a store is given, ``store.push(state)`` every ``persist_every``
+        boundaries (default 1 = every boundary) and at the final one —
+        e.g. ``repro.ckpt.diskless.SweepStateStore``.
+    semantics:
+        FT-MPI continuation policy on detection (``repro.ft.semantics``).
+        REBUILD (default) is the paper's recovery; ABORT re-raises the
+        death as ``LaneFailure``; SHRINK/BLANK are not meaningful for an
+        in-flight factorization (every lane owns irreplaceable rows) and
+        raise ``NotImplementedError``.
+    """
+
+    def __init__(
+        self,
+        A0=None,
+        comm=None,
+        panel_width: Optional[int] = None,
+        detector: Optional[OnlineDetector] = None,
+        *,
+        segment_points: int = 1,
+        jit_segments: bool = True,
+        step_fn: Optional[Callable[[SweepState], SweepState]] = None,
+        fault_hooks: Sequence[FaultHook] = (),
+        store=None,
+        persist_every: Optional[int] = None,
+        semantics: Semantics = Semantics.REBUILD,
+        state: Optional[SweepState] = None,
+    ):
+        assert comm is not None, "comm is required"
+        self.comm = comm
+        if state is None:
+            assert A0 is not None and panel_width is not None, \
+                "need (A0, panel_width) or a resume state"
+            state = initial_sweep_state(comm, A0, panel_width)
+        self.state = state
+        self.detector = detector if detector is not None else NaNSentinelDetector()
+        assert segment_points >= 1
+        self.segment_points = segment_points
+        self.jit_segments = jit_segments
+        self.step_fn = step_fn
+        if step_fn is None and jit_segments:
+            assert isinstance(comm, SimComm), (
+                "jitted host segments need SimComm; pass step_fn= for the "
+                "shard_map backend (repro.launch.spmd_qr.make_spmd_sweep_step)"
+            )
+        self.fault_hooks = list(fault_hooks)
+        self.store = store
+        if store is not None and persist_every is None:
+            persist_every = 1  # a store with no cadence means every boundary
+        self.persist_every = persist_every
+        self.semantics = semantics
+        self.events: List[RecoveryEvent] = []
+        # run statistics (benchmarks read these)
+        self.segments_run = 0
+        self.poll_s = 0.0
+        self.recover_s = 0.0
+
+    @classmethod
+    def from_state(cls, state: SweepState, comm, **kw) -> "SweepOrchestrator":
+        """Resume from a persisted mid-sweep ``SweepState`` (e.g.
+        ``repro.ckpt.load_sweep_state`` or a diskless snapshot). The
+        recovery-event log of the previous incarnation is not carried
+        over."""
+        return cls(comm=comm, state=state, **kw)
+
+    # -- segments ----------------------------------------------------------
+
+    def _segment(self, state: SweepState) -> SweepState:
+        if self.step_fn is not None:
+            for _ in range(self.segment_points):
+                if state.cursor is None:
+                    break
+                state = self.step_fn(state)
+            return state
+        if not self.jit_segments:
+            return run_steps(self.comm, state, self.segment_points)
+        key = (type(self.comm).__name__, self.comm.axis_size(),
+               self.segment_points)
+        fn = _SEGMENT_CACHE.get(key)
+        if fn is None:
+            comm, n = self.comm, self.segment_points
+            fn = jax.jit(lambda s: run_steps(comm, s, n))
+            _SEGMENT_CACHE[key] = fn
+        return fn(state)
+
+    # -- the host loop -----------------------------------------------------
+
+    def run(self) -> FTSweepResult:
+        """Drive the sweep to completion; returns the same ``FTSweepResult``
+        as ``ft_caqr_sweep`` (bit-identical to the failure-free sweep no
+        matter what the detector found, or ``UnrecoverableFailure``)."""
+        geom = self.state.geom
+        levels = geom.levels
+        boundary = 0
+        while True:
+            if self.state.cursor is not None:
+                self.state = self._segment(self.state)
+                self.segments_run += 1
+            boundary += 1
+            # the just-completed point = the recoverable boundary any death
+            # discovered now is attributed to
+            point = prev_sweep_point(self.state.cursor, geom.n_panels, levels)
+            for hook in self.fault_hooks:
+                self.state = hook(self.comm, self.state)
+            t0 = time.perf_counter()
+            newly = list(self.detector.poll(self.comm, self.state))
+            self.poll_s += time.perf_counter() - t0
+            if newly:
+                self._recover(newly, point)
+            if self.store is not None and self.persist_every and (
+                    boundary % self.persist_every == 0
+                    or self.state.cursor is None):
+                self.store.push(self.state)
+            if self.state.cursor is None:
+                break
+        R, factors, bundles = finalize(self.comm, self.state)
+        return FTSweepResult(R=R, factors=factors, bundles=bundles,
+                             events=self.events)
+
+    # -- recovery ----------------------------------------------------------
+
+    def _recover(self, newly: List[int], point) -> None:
+        assert point is not None, "death detected before any sweep point ran"
+        if self.semantics is Semantics.ABORT:
+            raise LaneFailure(newly[0], point)
+        if self.semantics is not Semantics.REBUILD:
+            raise NotImplementedError(
+                f"{self.semantics} is not meaningful mid-factorization: "
+                "every lane owns irreplaceable rows of A (use REBUILD)"
+            )
+        dead = set(newly)
+
+        def on_recovered(lane: int) -> None:
+            dead.discard(lane)
+            # announce the respawn so the detector re-arms for this lane
+            # immediately (back-to-back deaths at consecutive boundaries
+            # must still be seen)
+            revive = getattr(self.detector, "revive", None)
+            if revive is not None:
+                revive(lane)
+
+        # the SAME strike-then-rebuild protocol as the scheduled driver's
+        # checkpoint — shared code, so the scheduled-vs-online bitwise
+        # equivalence cannot drift apart in one copy
+        self.state, events = recover_lanes(
+            self.comm, self.state, newly, point, dead,
+            sync=lambda s: jax.block_until_ready(
+                jax.tree_util.tree_leaves(s)),
+            on_recovered=on_recovered,
+        )
+        self.recover_s += sum(e.elapsed_s for e in events)
+        self.events.extend(events)
+
+
+def ft_caqr_sweep_online(
+    A0,
+    comm,
+    panel_width: int,
+    detector: Optional[OnlineDetector] = None,
+    **kw,
+) -> FTSweepResult:
+    """One-call form of the online path: ``SweepOrchestrator(...).run()``.
+
+    The online counterpart of ``ft_caqr_sweep`` — same result layout, but
+    failures are discovered by ``detector`` at runtime instead of scripted
+    by a ``FailureSchedule``."""
+    return SweepOrchestrator(A0, comm, panel_width, detector, **kw).run()

@@ -1,0 +1,430 @@
+"""The reified sweep state machine: ``SweepState`` + ``sweep_step``.
+
+PRs 2-4 ran the FT-CAQR sweep as ONE monolithic program whose loop state
+lived in Python locals of ``FTSweepDriver.run`` — fine for trace-time
+``FailureSchedule`` simulation, but the paper's recovery protocol is
+*online*: a process dies at an arbitrary wall-clock moment and survivors
+discover it at the next collective (Coti 2016 §II). This module extracts
+the driver's implicit loop state into an explicit, serializable pytree and
+a pure one-point transition so execution can be suspended, persisted,
+resumed, and interleaved with *runtime* failure detection
+(``repro.ft.online.detect`` / ``repro.ft.online.orchestrator``).
+
+``SweepState``
+    Everything the sweep holds between two interruptible points: the
+    working matrix and re-readable source, the in-flight panel artifacts
+    (leaf WY factors, the TSQR butterfly ladder, C' and the per-level
+    trailing bundles), the per-panel stored outputs, and the **cursor** —
+    the next ``sweep_point(panel, phase, level)`` to execute. The cursor
+    (with the static ``SweepGeometry``) is pytree *aux data*: two states at
+    different points are different treedefs, so ``jax.jit(sweep_step)``
+    specializes per point with no retrace hazards.
+
+``sweep_step(comm, state) -> state``
+    Executes exactly one sweep point — the work between the previous
+    recoverable boundary and ``state.cursor`` — and advances the cursor.
+    It calls the *same* single-level primitives the monolithic sweep is
+    built from (``ft_tsqr_level``, ``trailing_combine_level``,
+    ``_leaf_apply``, the ``caqr`` geometry/deposit helpers), in the same
+    order, so iterating it to completion is **bit-identical** to the
+    monolithic windowed sweep — ``FTSweepDriver.run`` is now literally this
+    loop (there is no second floating-point program to drift).
+
+Cursor semantics (DESIGN.md §9): the boundary state after executing point
+``p`` is exactly the state the monolithic driver had at ``_checkpoint(p)``.
+Work that the monolithic driver ran *between* checkpoints is assigned to
+the segment that ENDS at the next point: panel ``k``'s writeback/deposit
+(which follows its last trailing checkpoint) runs at the start of the
+``(k+1, leaf)`` segment, and the final panel's deposit plus R assembly run
+in ``finalize``. A death injected at a boundary therefore corresponds
+one-to-one to a ``FailureSchedule`` death at the just-completed point.
+
+Serialization: ``sweep_state_to_host`` / ``sweep_state_from_host`` flatten
+a state to named numpy arrays plus a JSON-able meta record (geometry,
+cursor, tuple arities) — the wire format behind ``repro.ckpt``'s
+``save_sweep_state`` and the diskless mid-sweep snapshots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.caqr import (
+    PanelFactors,
+    SweepGeometry,
+    advance_columns,
+    extract_r_rows,
+    make_panel_factors,
+    pad_bundle,
+    pad_to_geometry,
+    panel_geometry,
+    sweep_geometry,
+)
+from repro.core.householder import householder_qr_masked
+from repro.core.trailing import (
+    RecoveryBundle,
+    _leaf_apply,
+    _writeback,
+    trailing_combine_level,
+)
+from repro.core.tsqr import DistTSQRFactors, _levels, ft_tsqr_level
+from repro.ft.failures import (
+    PHASE_LEAF,
+    PHASE_TSQR,
+    PHASE_TRAILING,
+    next_sweep_point,
+    sweep_point,
+)
+
+Cursor = Optional[Tuple[int, str, int]]
+
+# Dynamic (pytree-children) fields of SweepState, in flattening order.
+_ARRAY_FIELDS = (
+    "A0", "A",
+    "window", "leaf_Y", "leaf_T", "R_leaf", "R_carry",
+    "Y2s", "Ts", "level_Y2", "level_T",
+    "C_local", "C_prime", "Ws", "Cs_self", "Cs_buddy", "tops",
+    "factors", "R_rows", "bundles",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepState:
+    """Explicit loop state of the windowed FT-CAQR sweep (a jax pytree).
+
+    Static aux data: ``geom`` (the padded ``SweepGeometry``) and ``cursor``
+    (the next sweep point; ``None`` when every point has executed and only
+    ``finalize`` remains). Everything else is per-lane array state in the
+    SimComm layout (lane axis per leaf where ``state_lane_axes`` says —
+    position 0 for block/leaf arrays, position 1 for level-stacked stacks).
+
+    In-flight fields are ``None`` (empty tuples for the growing ladders)
+    outside the phase that defines them — exactly when the monolithic
+    driver's corresponding locals were unset.
+    """
+
+    geom: SweepGeometry
+    cursor: Cursor
+    # the re-readable data source (padded; never poisoned) + working matrix
+    A0: Any
+    A: Any
+    # in-flight panel state (what a mid-panel death obliterates)
+    window: Any = None
+    leaf_Y: Any = None
+    leaf_T: Any = None
+    R_leaf: Any = None
+    R_carry: Any = None
+    Y2s: Tuple = ()          # TSQR butterfly ladder, one entry per level
+    Ts: Tuple = ()
+    level_Y2: Any = None     # stacked ladder (L, [P,] b, b) — trailing phase
+    level_T: Any = None
+    C_local: Any = None      # leaf-applied live window
+    C_prime: Any = None      # running C' between trailing levels
+    Ws: Tuple = ()           # per-level trailing bundle slices
+    Cs_self: Tuple = ()
+    Cs_buddy: Tuple = ()
+    tops: Tuple = ()
+    # stored outputs, one entry per completed (deposited) panel
+    factors: Tuple = ()      # PanelFactors
+    R_rows: Tuple = ()
+    bundles: Tuple = ()      # RecoveryBundle
+
+    @property
+    def levels(self) -> int:
+        return self.geom.levels
+
+    @property
+    def done(self) -> bool:
+        return self.cursor is None
+
+    def replace(self, **kw) -> "SweepState":
+        return dataclasses.replace(self, **kw)
+
+
+def _state_flatten(s: SweepState):
+    return tuple(getattr(s, f) for f in _ARRAY_FIELDS), (s.geom, s.cursor)
+
+
+def _state_unflatten(aux, children) -> SweepState:
+    geom, cursor = aux
+    return SweepState(geom=geom, cursor=cursor,
+                      **dict(zip(_ARRAY_FIELDS, children)))
+
+
+jax.tree_util.register_pytree_node(SweepState, _state_flatten, _state_unflatten)
+
+
+def initial_sweep_state(comm, A0, panel_width: int) -> SweepState:
+    """Entry state: padded source matrix, cursor at the first sweep point.
+
+    Accepts anything ``caqr_factorize`` accepts (tall / ragged / wide); the
+    state machine runs at the padded ``sweep_geometry`` like the driver.
+    """
+    P = comm.axis_size()
+    assert _levels(P) >= 1, "need at least 2 lanes to tolerate failures"
+    m_loc, n = comm.local_shape(A0)
+    geom = sweep_geometry(P, m_loc, n, panel_width)
+    A_pad = pad_to_geometry(comm, A0, geom)
+    return SweepState(geom=geom, cursor=sweep_point(0, PHASE_LEAF),
+                      A0=A_pad, A=A_pad)
+
+
+# -- the transition ----------------------------------------------------------
+
+
+def _begin_panel_leaf(comm, s: SweepState, k: int) -> SweepState:
+    """Window slice + local masked panel QR of panel ``k``."""
+    geom = s.geom
+    col0, _t_lane, row_start, active = panel_geometry(
+        comm, k, geom.b, geom.m_loc_pad)
+    window = comm.map_local(lambda A: A[:, col0:])(s.A)
+    panel = comm.map_local(lambda W: W[:, : geom.b])(window)
+    wy = comm.map_local(householder_qr_masked)(panel, row_start)
+    return s.replace(
+        window=window,
+        leaf_Y=comm.where(active, wy.Y, jnp.zeros_like(wy.Y)),
+        leaf_T=comm.where(active, wy.T, jnp.zeros_like(wy.T)),
+        R_leaf=comm.where(active, wy.R, jnp.zeros_like(wy.R)),
+    )
+
+
+def _deposit_panel(comm, s: SweepState, k: int) -> SweepState:
+    """Writeback + per-panel output deposit of the just-finished panel
+    ``k`` (the work the monolithic driver ran after the panel's last
+    trailing checkpoint), then clear the in-flight fields."""
+    geom = s.geom
+    col0, t_lane, row_start, active = panel_geometry(
+        comm, k, geom.b, geom.m_loc_pad)
+    C_out = _writeback(comm, s.C_local, s.C_prime, row_start, active)
+    A = advance_columns(comm, s.A, C_out, col0)
+    r_rows = extract_r_rows(comm, s.C_prime, t_lane, col0)
+    bundle = pad_bundle(RecoveryBundle(
+        W=jnp.stack(s.Ws),
+        C_self=jnp.stack(s.Cs_self),
+        C_buddy=jnp.stack(s.Cs_buddy),
+        Y2=s.level_Y2,
+        T=s.level_T,
+        self_was_top=jnp.stack(s.tops),
+    ), col0)
+    pf = make_panel_factors(
+        comm, s.leaf_Y, s.leaf_T, s.level_Y2, s.level_T,
+        row_start, active, t_lane,
+    )
+    return s.replace(
+        A=A,
+        R_rows=s.R_rows + (r_rows,),
+        bundles=s.bundles + (bundle,),
+        factors=s.factors + (pf,),
+        window=None, leaf_Y=None, leaf_T=None, R_leaf=None, R_carry=None,
+        Y2s=(), Ts=(), level_Y2=None, level_T=None,
+        C_local=None, C_prime=None, Ws=(), Cs_self=(), Cs_buddy=(), tops=(),
+    )
+
+
+def sweep_step(comm, state: SweepState) -> SweepState:
+    """Execute exactly one sweep point (the segment ending at
+    ``state.cursor``) and advance the cursor.
+
+    Pure and Comm-generic: under ``SimComm`` it runs eagerly or under
+    ``jax.jit`` (the orchestrator compiles it per cursor); under ``AxisComm``
+    it is the body a ``shard_map`` segment traces
+    (``repro.launch.spmd_qr.make_spmd_sweep_step``). The boundary state is
+    bit-identical to the monolithic driver's at ``_checkpoint(cursor)`` —
+    the driver *is* a loop over this function.
+    """
+    point = state.cursor
+    assert point is not None, "sweep already complete; call finalize"
+    geom = state.geom
+    k, phase, lvl = point
+    L = state.levels
+    col0 = k * geom.b
+    t_lane = col0 // geom.m_loc_pad
+
+    if phase == PHASE_LEAF:
+        if k > 0:
+            state = _deposit_panel(comm, state, k - 1)
+        state = _begin_panel_leaf(comm, state, k)
+    elif phase == PHASE_TSQR:
+        # the monolithic driver seeds the carry with R_leaf after the leaf
+        # checkpoint — same value, assigned at the first butterfly level
+        carry = state.R_leaf if lvl == 0 else state.R_carry
+        R_next, Y2, T = ft_tsqr_level(comm, carry, lvl, t_lane, t_lane)
+        state = state.replace(
+            R_carry=R_next, Y2s=state.Y2s + (Y2,), Ts=state.Ts + (T,))
+    else:  # PHASE_TRAILING
+        if lvl == 0:
+            # stack the ladder + leaf-apply the live window (the work the
+            # monolithic driver ran between the last TSQR checkpoint and
+            # the first trailing checkpoint)
+            _c0, _t, row_start, active = panel_geometry(
+                comm, k, geom.b, geom.m_loc_pad)
+            level_Y2 = jnp.stack(state.Y2s)
+            level_T = jnp.stack(state.Ts)
+            dist = DistTSQRFactors(state.leaf_Y, state.leaf_T, level_Y2,
+                                   level_T, state.R_leaf)
+            C_local, C_prime = _leaf_apply(
+                comm, dist, state.window, row_start,
+                active=active, skip_consumed=True)
+            state = state.replace(
+                level_Y2=level_Y2, level_T=level_T, C_local=C_local,
+                C_prime=comm.where(active, C_prime, jnp.zeros_like(C_prime)),
+            )
+        out = trailing_combine_level(
+            comm, state.C_prime, state.level_Y2[lvl], state.level_T[lvl],
+            lvl, t_lane, t_lane,
+        )
+        state = state.replace(
+            C_prime=out.C_prime,
+            Ws=state.Ws + (out.W,),
+            Cs_self=state.Cs_self + (out.C_self,),
+            Cs_buddy=state.Cs_buddy + (out.C_buddy,),
+            tops=state.tops + (out.is_top,),
+        )
+
+    return state.replace(
+        cursor=next_sweep_point(point, geom.n_panels, L))
+
+
+def finalize(comm, state: SweepState):
+    """Deposit the last panel and assemble the sweep outputs.
+
+    Returns ``(R, factors, bundles)`` with the same layout as
+    ``CAQRResult(collect_bundles=True)`` / ``FTSweepResult`` — the driver
+    and the orchestrator both wrap this. Pure: the caller's state is not
+    consumed (calling twice double-runs the deposit arithmetic but on the
+    same inputs)."""
+    from repro.core.caqr import assemble_R  # local import: cycle-free either way
+
+    assert state.cursor is None, f"sweep not complete: at {state.cursor}"
+    state = _deposit_panel(comm, state, state.geom.n_panels - 1)
+    factors = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *state.factors)
+    bundles = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *state.bundles)
+    R = assemble_R(comm, jnp.stack(state.R_rows), state.geom)
+    return R, factors, bundles
+
+
+def run_steps(comm, state: SweepState, max_points: Optional[int] = None
+              ) -> SweepState:
+    """Iterate ``sweep_step`` up to ``max_points`` times (or to completion).
+    The orchestrator jits this whole call as one compiled segment, so
+    ``max_points`` is the segment size."""
+    n = 0
+    while state.cursor is not None and (max_points is None or n < max_points):
+        state = sweep_step(comm, state)
+        n += 1
+    return state
+
+
+# -- lane-axis bookkeeping ---------------------------------------------------
+
+_FACTORS_AXES = PanelFactors(
+    leaf_Y=0, leaf_T=0, level_Y2=1, level_T=1,
+    row_start=0, active=0, target=0,
+)
+_BUNDLE_AXES = RecoveryBundle(W=1, C_self=1, C_buddy=1, Y2=1, T=1,
+                              self_was_top=1)
+
+
+def state_lane_axes(state: SweepState) -> SweepState:
+    """A ``SweepState``-shaped pytree of ints: the lane-axis position of
+    every array leaf (SimComm layout). Drives generic death-masking
+    (``repro.ft.driver.obliterate_state``), the NaN-sentinel probes, and the
+    per-leaf ``shard_map`` specs of the SPMD segment runner. Structure-only:
+    works on ``jax.eval_shape`` structs too."""
+
+    def like(field, ax):
+        # mirror the field's structure (None stays None; tuples map per-entry)
+        return jax.tree_util.tree_map(lambda _: ax, getattr(state, field))
+
+    axes = {f: like(f, 0) for f in _ARRAY_FIELDS}
+    for f in ("level_Y2", "level_T"):
+        axes[f] = like(f, 1)
+    axes["factors"] = tuple(_FACTORS_AXES for _ in state.factors)
+    axes["bundles"] = tuple(_BUNDLE_AXES for _ in state.bundles)
+    return SweepState(geom=state.geom, cursor=state.cursor, **axes)
+
+
+# -- host serialization (the SweepState wire format, DESIGN.md §9) -----------
+
+
+def _flat_arrays(state: SweepState) -> Dict[str, Any]:
+    flat: Dict[str, Any] = {}
+    for f in _ARRAY_FIELDS:
+        v = getattr(state, f)
+        if v is None:
+            continue
+        if isinstance(v, tuple):
+            for i, entry in enumerate(v):
+                if isinstance(entry, (PanelFactors, RecoveryBundle)):
+                    for fld, x in zip(entry._fields, entry):
+                        flat[f"{f}/{i}/{fld}"] = x
+                else:
+                    flat[f"{f}/{i}"] = entry
+        else:
+            flat[f] = v
+    return flat
+
+
+def sweep_state_to_host(state: SweepState) -> Dict[str, np.ndarray]:
+    """Flatten a state to named host (numpy) arrays plus a ``__meta__``
+    JSON record (geometry, cursor, per-field structure) — the persistable
+    wire format. Inverse: ``sweep_state_from_host``."""
+    arrays = {k: np.asarray(v) for k, v in _flat_arrays(state).items()}
+    meta = {
+        "version": 1,
+        "geom": list(state.geom),
+        "cursor": list(state.cursor) if state.cursor is not None else None,
+        "none_fields": [
+            f for f in _ARRAY_FIELDS
+            if not isinstance(getattr(state, f), tuple)
+            and getattr(state, f) is None
+        ],
+        "tuple_lens": {
+            f: len(getattr(state, f)) for f in _ARRAY_FIELDS
+            if isinstance(getattr(state, f), tuple)
+        },
+    }
+    arrays["__meta__"] = np.asarray(json.dumps(meta))
+    return arrays
+
+
+def sweep_state_from_host(arrays: Dict[str, np.ndarray],
+                          to_device: bool = True) -> SweepState:
+    """Rebuild a ``SweepState`` from ``sweep_state_to_host`` output (e.g. a
+    loaded ``.npz``). ``to_device=False`` keeps numpy leaves — structural
+    inspection with no live jax backend needed."""
+    meta = json.loads(str(arrays["__meta__"]))
+    assert meta["version"] == 1, meta
+    geom = SweepGeometry(*meta["geom"])
+    cursor = tuple(meta["cursor"]) if meta["cursor"] is not None else None
+    conv = jnp.asarray if to_device else np.asarray
+
+    def leaf(key):
+        return conv(arrays[key])
+
+    fields: Dict[str, Any] = {}
+    for f in _ARRAY_FIELDS:
+        if f in meta["none_fields"]:
+            fields[f] = None
+        elif f in meta["tuple_lens"]:
+            n = meta["tuple_lens"][f]
+            if f == "factors":
+                fields[f] = tuple(
+                    PanelFactors(**{fld: leaf(f"factors/{i}/{fld}")
+                                    for fld in PanelFactors._fields})
+                    for i in range(n))
+            elif f == "bundles":
+                fields[f] = tuple(
+                    RecoveryBundle(**{fld: leaf(f"bundles/{i}/{fld}")
+                                      for fld in RecoveryBundle._fields})
+                    for i in range(n))
+            else:
+                fields[f] = tuple(leaf(f"{f}/{i}") for i in range(n))
+        else:
+            fields[f] = leaf(f)
+    return SweepState(geom=geom, cursor=cursor, **fields)

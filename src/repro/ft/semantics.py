@@ -8,6 +8,13 @@ failures; the FT-CAQR sweep driver (``repro.ft.driver``) implements REBUILD
 where the respawned rank's state is reconstructed from its re-read input
 slice plus one surviving buddy per artifact.
 
+The online orchestrator (``repro.ft.online.orchestrator``) takes the policy
+as its ``semantics`` argument and applies it to *runtime-detected* deaths:
+REBUILD recovers in-flight, ABORT re-raises the detection as
+``LaneFailure``; SHRINK and BLANK are refused mid-factorization — every
+lane owns irreplaceable rows of A, so a smaller/holed world cannot finish
+the same problem (they remain training-loop policies).
+
 >>> Semantics.REBUILD.value
 'rebuild'
 >>> [s.name for s in Semantics]

@@ -4,6 +4,12 @@ NOTE: do not import repro.launch.dryrun from library code — it force-sets
 XLA_FLAGS device count at import time (dry-run entrypoint only).
 """
 from repro.launch import mesh, spmd_qr
-from repro.launch.spmd_qr import ft_caqr_sweep_spmd, make_lane_mesh
+from repro.launch.spmd_qr import (
+    ft_caqr_sweep_online_spmd,
+    ft_caqr_sweep_spmd,
+    make_lane_mesh,
+    make_spmd_sweep_step,
+)
 
-__all__ = ["mesh", "spmd_qr", "ft_caqr_sweep_spmd", "make_lane_mesh"]
+__all__ = ["mesh", "spmd_qr", "ft_caqr_sweep_online_spmd",
+           "ft_caqr_sweep_spmd", "make_lane_mesh", "make_spmd_sweep_step"]

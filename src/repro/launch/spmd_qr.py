@@ -24,6 +24,13 @@ Scheduling caveats inherited from tracing the whole sweep into one program:
 ``benchmarks/bench_spmd.py`` for measured SPMD REBUILD cost), and an
 unrecoverable schedule raises ``UnrecoverableFailure`` at trace time,
 before any device computes.
+
+The *online* entrypoints below (``make_spmd_sweep_step`` /
+``ft_caqr_sweep_online_spmd``) lift both caveats by not tracing the sweep
+as one program: the host orchestrator runs shard_map ``sweep_step``
+segments and discovers failures at runtime between them (DESIGN.md §9) —
+REBUILD latency is then real wall clock and recoverability is judged when
+the death actually happens.
 """
 from __future__ import annotations
 
@@ -34,11 +41,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.caqr import PanelFactors
-from repro.core.comm import AxisComm
+from repro.core.comm import AxisComm, SimComm
 from repro.core.trailing import RecoveryBundle
 from repro.dist import compat
 from repro.ft.driver import FTSweepDriver, FTSweepResult
 from repro.ft.failures import FailureSchedule
+from repro.ft.online.state import state_lane_axes, sweep_step
 
 # Lane-axis position of every per-lane leaf in the SimComm result layout.
 # The shard_map body expands a size-1 axis there; with the matching out_spec
@@ -125,3 +133,99 @@ def ft_caqr_sweep_spmd(
     # the trace populated the static event ledger exactly once (fresh jit)
     (events,) = events_log
     return FTSweepResult(R=R, factors=factors, bundles=bundles, events=events)
+
+
+# -- online (runtime-detected) path ------------------------------------------
+
+
+def make_spmd_sweep_step(mesh=None, axis_name: str = "qr"):
+    """Shard_map segment backend for the online orchestrator.
+
+    Returns ``step(state) -> state`` executing ONE sweep point of the
+    reified state machine (``repro.ft.online.state.sweep_step``) under
+    ``shard_map`` over the lane mesh. Between calls the ``SweepState``
+    lives as *global* lane-sharded arrays in the SimComm layout — the
+    host-side orchestrator probes sentinels, injects/obliterates and
+    REBUILDs on that global layout with the SimComm mask primitives, while
+    every compiled segment runs the AxisComm program on the devices. One
+    program is compiled per cursor position (the treedef carries the
+    cursor) and cached for the lifetime of the returned callable.
+
+    Per-leaf specs come from ``state_lane_axes``; the body squeezes each
+    leaf's size-1 lane axis so the AxisComm step sees true per-lane locals,
+    and re-expands on the way out, keeping the gathered global layout
+    leaf-for-leaf identical to a SimComm run (the §8 oracle, extended to
+    every intermediate boundary state).
+    """
+    if mesh is None:
+        mesh = make_lane_mesh(axis_name=axis_name)
+    n_lanes = mesh.shape[axis_name]
+    cache = {}
+
+    def spec_of(lane_axis):
+        return P(*([None] * lane_axis + [axis_name]))
+
+    def step(state):
+        key = jax.tree_util.tree_structure(state)
+        fn = cache.get(key)
+        if fn is None:
+            in_axes = state_lane_axes(state)
+            out_struct = jax.eval_shape(
+                lambda s: sweep_step(SimComm(n_lanes), s), state)
+            out_axes = state_lane_axes(out_struct)
+
+            def body(s_shard):
+                local = jax.tree_util.tree_map(
+                    lambda x, ax: jnp.squeeze(x, axis=ax), s_shard, in_axes)
+                out = sweep_step(AxisComm(axis_name), local)
+                return jax.tree_util.tree_map(
+                    lambda x, ax: jnp.expand_dims(x, ax), out, out_axes)
+
+            fn = jax.jit(compat.shard_map(
+                body, mesh,
+                in_specs=(jax.tree_util.tree_map(spec_of, in_axes),),
+                out_specs=jax.tree_util.tree_map(spec_of, out_axes),
+            ))
+            cache[key] = fn
+        with compat.set_mesh(mesh):
+            return fn(state)
+
+    return step
+
+
+def ft_caqr_sweep_online_spmd(
+    A: jax.Array,
+    panel_width: int,
+    detector=None,
+    mesh=None,
+    axis_name: str = "qr",
+    **orchestrator_kw,
+) -> FTSweepResult:
+    """Online recovery on the production SPMD path: host-side orchestrator,
+    shard_map segments, runtime failure detection — no trace-time schedule.
+
+    ``A`` is the full ``(m, n)`` matrix, row-sharded over the lane mesh like
+    ``ft_caqr_sweep_spmd``. Extra keywords (``fault_hooks``,
+    ``segment_points``, ``store``/``persist_every``, ...) pass through to
+    ``repro.ft.online.orchestrator.SweepOrchestrator``. The result layout is
+    the SimComm layout, directly comparable to both the simulator and the
+    scheduled SPMD entry — a runtime-detected kill is bitwise-identical to
+    the same kill expressed as a trace-time ``FailureSchedule``
+    (``tests/test_spmd_ft_driver.py``).
+    """
+    from repro.ft.online.orchestrator import SweepOrchestrator
+
+    if mesh is None:
+        mesh = make_lane_mesh(axis_name=axis_name)
+    n_lanes = mesh.shape[axis_name]
+    m, n = A.shape
+    assert m % n_lanes == 0, (
+        f"rows ({m}) must block-shard evenly over {n_lanes} lanes"
+    )
+    orch = SweepOrchestrator(
+        A.reshape(n_lanes, m // n_lanes, n), SimComm(n_lanes), panel_width,
+        detector=detector,
+        step_fn=make_spmd_sweep_step(mesh, axis_name),
+        **orchestrator_kw,
+    )
+    return orch.run()

@@ -1,0 +1,415 @@
+"""Online recovery: the reified sweep state machine under runtime detection.
+
+The scheduled (trace-time ``FailureSchedule``) driver is the differential
+oracle throughout: iterating ``sweep_step`` to completion must be
+bit-identical to the monolithic sweep, and a *runtime-detected* kill —
+poison injected at a segment boundary, discovered by the NaN-sentinel
+probe, rebuilt by the orchestrator — must produce output bit-identical to
+the same kill expressed as a trace-time schedule (and hence to the
+failure-free sweep). Also covered: two failures in different panels, a
+detector false-negative surfacing one segment late, suspend/persist/resume
+through ``repro.ckpt`` (numpy round-trip), and the diskless snapshot store.
+"""
+import functools
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimComm, caqr_factorize, sweep_geometry
+from repro.ckpt import load_sweep_state, save_sweep_state
+from repro.ckpt.diskless import SweepStateStore
+from repro.ft import (
+    FailureSchedule,
+    SweepOrchestrator,
+    UnrecoverableFailure,
+    ft_caqr_sweep,
+    ft_caqr_sweep_online,
+    iter_sweep_points,
+    sweep_point,
+)
+from repro.ft.failures import LaneFailure, next_sweep_point, prev_sweep_point
+from repro.ft.online.detect import (
+    DelayedDetector,
+    FailStopDetector,
+    NaNSentinelDetector,
+    ScriptedKiller,
+    WallClockKiller,
+)
+from repro.ft.online.state import (
+    finalize,
+    initial_sweep_state,
+    sweep_state_from_host,
+    sweep_state_to_host,
+    sweep_step,
+)
+from repro.ft.semantics import Semantics
+
+# the PR-3 ragged geometry: unaligned lane heights AND a ragged last panel
+RP, RM_LOC, RN, RB = 4, 6, 10, 4
+RGEOM = sweep_geometry(RP, RM_LOC, RN, RB)
+LEVELS = 2
+R_POINTS = list(iter_sweep_points(RGEOM.n_panels, LEVELS))
+
+
+def _matrix(P=RP, m_loc=RM_LOC, n=RN, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+
+
+def _leaves(*trees):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(trees)]
+
+
+def _assert_bit_identical(got, ref):
+    for g, r in zip(_leaves(got.R, got.factors, got.bundles),
+                    _leaves(ref.R, ref.factors, ref.bundles)):
+        assert np.array_equal(g, r), "online output differs from oracle"
+
+
+def _assert_same_events(got, sched):
+    assert [(e.point, e.lane, e.reads) for e in got.events] == \
+        [(e.point, e.lane, e.reads) for e in sched.events]
+
+
+@pytest.fixture(scope="module")
+def ragged_reference():
+    A = _matrix()
+    ref = caqr_factorize(A, SimComm(RP), RB, collect_bundles=True,
+                         use_scan=False)
+    return A, ref
+
+
+# -- the state machine itself ------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [
+    ("aligned", 8, 16, 4), ("ragged", RM_LOC, RN, RB), ("wide", 4, 24, 4),
+], ids=lambda s: s[0])
+def test_stepped_iteration_matches_monolithic(shape):
+    """Iterating jitted sweep_step to completion + finalize == the
+    monolithic windowed sweep, bit for bit, on every geometry class."""
+    _, m_loc, n, b = shape
+    comm = SimComm(4)
+    A = _matrix(4, m_loc, n, seed=5)
+    ref = caqr_factorize(A, comm, b, collect_bundles=True, use_scan=False)
+    step = jax.jit(functools.partial(sweep_step, comm))
+    s = initial_sweep_state(comm, A, b)
+    points = []
+    while s.cursor is not None:
+        points.append(s.cursor)
+        s = step(s)
+    assert points == list(iter_sweep_points(s.geom.n_panels, LEVELS))
+    R, factors, bundles = finalize(comm, s)
+    for g, r in zip(_leaves(R, factors, bundles),
+                    _leaves(ref.R, ref.factors, ref.bundles)):
+        assert np.array_equal(g, r)
+
+
+def test_cursor_arithmetic_round_trip():
+    """next/prev sweep-point are inverse over the whole enumeration."""
+    pts = R_POINTS
+    for a, b_ in zip(pts, pts[1:] + [None]):
+        assert next_sweep_point(a, RGEOM.n_panels, LEVELS) == b_
+        assert prev_sweep_point(b_, RGEOM.n_panels, LEVELS) == a
+    assert prev_sweep_point(pts[0], RGEOM.n_panels, LEVELS) is None
+
+
+# -- orchestrator: failure-free + the online kill matrix ---------------------
+
+
+def test_orchestrator_failure_free(ragged_reference):
+    A, ref = ragged_reference
+    got = SweepOrchestrator(A, SimComm(RP), RB).run()
+    _assert_bit_identical(got, ref)
+    assert got.events == []
+
+
+@pytest.mark.parametrize("lane", [0, 1, 3])
+@pytest.mark.parametrize("point", R_POINTS,
+                         ids=lambda p: f"p{p[0]}-{p[1]}{p[2]}")
+def test_online_kill_matrix_ragged(ragged_reference, point, lane):
+    """Every phase/level/panel of the ragged sweep: a runtime kill at the
+    boundary, discovered by the NaN sentinel, is bit-identical to the same
+    kill as a trace-time FailureSchedule (and to failure-free)."""
+    A, ref = ragged_reference
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, fault_hooks=[ScriptedKiller({point: [lane]})])
+    _assert_bit_identical(got, ref)
+    sched = ft_caqr_sweep(A, SimComm(RP), RB,
+                          schedule=FailureSchedule(events={point: [lane]}))
+    _assert_same_events(got, sched)
+    (event,) = got.events
+    assert event.point == point and event.lane == lane
+    assert all(src != lane for src in event.reads.values())
+
+
+@pytest.mark.parametrize("geom", [
+    ("aligned", 8, 16, 4, sweep_point(2, "trailing", 1), 2),
+    ("wide", 4, 24, 4, sweep_point(2, "tsqr", 0), 1),
+], ids=lambda g: g[0])
+def test_online_kill_other_geometries(geom):
+    _, m_loc, n, b, point, lane = geom
+    comm = SimComm(4)
+    A = _matrix(4, m_loc, n, seed=7)
+    ref = caqr_factorize(A, comm, b, collect_bundles=True, use_scan=False)
+    got = ft_caqr_sweep_online(
+        A, comm, b, fault_hooks=[ScriptedKiller({point: [lane]})])
+    _assert_bit_identical(got, ref)
+    sched = ft_caqr_sweep(A, comm, b,
+                          schedule=FailureSchedule(events={point: [lane]}))
+    _assert_same_events(got, sched)
+
+
+def test_online_two_failures_in_different_panels(ragged_reference):
+    A, ref = ragged_reference
+    kills = {sweep_point(0, "trailing", 1): [2], sweep_point(1, "tsqr", 0): [1]}
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, fault_hooks=[ScriptedKiller(kills)])
+    _assert_bit_identical(got, ref)
+    sched = ft_caqr_sweep(A, SimComm(RP), RB,
+                          schedule=FailureSchedule(events=kills))
+    _assert_same_events(got, sched)
+    assert len(got.events) == 2
+
+
+def test_online_same_lane_dies_twice_same_panel(ragged_reference):
+    """The lane dies mid-trailing, is rebuilt, and dies AGAIN one level
+    later in the same panel. The rebuild must fully heal the lane — a
+    stale NaN (e.g. the running tsqr R) would keep its sentinel dark and
+    the second death would go undetected until survivors were
+    contaminated (regression for exactly that bug)."""
+    A, ref = ragged_reference
+    kills = {sweep_point(1, "trailing", 0): [2],
+             sweep_point(1, "trailing", 1): [2]}
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, fault_hooks=[ScriptedKiller(kills)])
+    _assert_bit_identical(got, ref)
+    sched = ft_caqr_sweep(A, SimComm(RP), RB,
+                          schedule=FailureSchedule(events=kills))
+    _assert_same_events(got, sched)
+    assert len(got.events) == 2
+
+
+def test_rebuilt_state_carries_no_nan(ragged_reference):
+    """After any REBUILD the state is NaN-free — the invariant the
+    sentinel detector's re-arming relies on (checked via the deep scan at
+    every boundary of a multi-death run)."""
+    from repro.ft.online.detect import _deep_nan_lanes
+
+    A, _ = ragged_reference
+    comm = SimComm(RP)
+    killer = ScriptedKiller({sweep_point(1, "trailing", 0): [2],
+                             sweep_point(2, "tsqr", 1): [0]})
+    seen_clean = []
+
+    def audit(comm_, state):
+        state = killer(comm_, state)
+        seen_clean.append(True)
+        return state
+
+    orch = SweepOrchestrator(A, comm, RB, fault_hooks=[audit])
+    orch.run()
+    assert not _deep_nan_lanes(comm, orch.state)
+    assert seen_clean
+
+
+def test_online_simultaneous_non_buddy_deaths(ragged_reference):
+    A, ref = ragged_reference
+    point = sweep_point(1, "trailing", 0)
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, fault_hooks=[ScriptedKiller({point: [0, 3]})])
+    _assert_bit_identical(got, ref)
+    assert len(got.events) == 2
+
+
+def test_online_buddy_pair_death_is_unrecoverable():
+    """Both members of a level-0 pair die at once: discovered at the same
+    boundary, and the REBUILD honestly refuses (the single source is dead)."""
+    A = _matrix()
+    point = sweep_point(1, "trailing", 0)
+    with pytest.raises(UnrecoverableFailure):
+        ft_caqr_sweep_online(
+            A, SimComm(RP), RB, fault_hooks=[ScriptedKiller({point: [2, 3]})])
+
+
+def test_detector_false_negative_one_segment_late(ragged_reference):
+    """The detector misses the death once; it surfaces one segment later
+    (after the lane-local leaf segment) and recovery at the *later*
+    boundary is bit-identical to a schedule that kills there."""
+    A, ref = ragged_reference
+    killer = ScriptedKiller({sweep_point(0, "trailing", 1): [2]})
+    det = DelayedDetector(NaNSentinelDetector(), miss=1)
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, detector=det, fault_hooks=[killer])
+    _assert_bit_identical(got, ref)
+    # attributed to the boundary where it was *found*, one point later
+    late_point = sweep_point(1, "leaf")
+    sched = ft_caqr_sweep(
+        A, SimComm(RP), RB,
+        schedule=FailureSchedule(events={late_point: [2]}))
+    _assert_same_events(got, sched)
+    assert got.events[0].point == late_point
+
+
+def test_fail_stop_detector_report_delay(ragged_reference):
+    """The injectable fail-stop detector: declared deaths surface after
+    report_delay polls — delay 0 equals the sentinel path bitwise."""
+    A, ref = ragged_reference
+    point = sweep_point(1, "trailing", 1)
+    det = FailStopDetector(report_delay=0)
+    killer = ScriptedKiller({point: [3]})
+
+    def kill_and_declare(comm, state):
+        before = len(killer._fired)
+        state = killer(comm, state)
+        if len(killer._fired) > before:
+            det.declare(3)
+        return state
+
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, detector=det, fault_hooks=[kill_and_declare])
+    _assert_bit_identical(got, ref)
+    assert [(e.point, e.lane) for e in got.events] == [(point, 3)]
+
+
+def test_nan_sentinel_deep_scan(ragged_reference):
+    """The deep (every-leaf) scan finds the same death the cheap sentinel
+    probe does, end to end."""
+    A, ref = ragged_reference
+    point = sweep_point(2, "tsqr", 1)
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, detector=NaNSentinelDetector(deep=True),
+        fault_hooks=[ScriptedKiller({point: [1]})])
+    _assert_bit_identical(got, ref)
+    assert [(e.point, e.lane) for e in got.events] == [(point, 1)]
+
+
+def test_segmented_execution_and_boundary_kill(ragged_reference):
+    """segment_points > 1: fewer boundaries, same bits; a kill at a segment
+    boundary recovers exactly like the scheduled oracle."""
+    A, ref = ragged_reference
+    orch = SweepOrchestrator(A, SimComm(RP), RB, segment_points=3)
+    got = orch.run()
+    _assert_bit_identical(got, ref)
+    assert orch.segments_run == -(-len(R_POINTS) // 3)
+    point = R_POINTS[2]  # just-completed at the first 3-point boundary
+    got = ft_caqr_sweep_online(
+        A, SimComm(RP), RB, segment_points=3,
+        fault_hooks=[ScriptedKiller({point: [1]})])
+    _assert_bit_identical(got, ref)
+    sched = ft_caqr_sweep(A, SimComm(RP), RB,
+                          schedule=FailureSchedule(events={point: [1]}))
+    _assert_same_events(got, sched)
+
+
+def test_abort_semantics_raises(ragged_reference):
+    A, _ = ragged_reference
+    point = sweep_point(0, "tsqr", 0)
+    with pytest.raises(LaneFailure):
+        ft_caqr_sweep_online(
+            A, SimComm(RP), RB, semantics=Semantics.ABORT,
+            fault_hooks=[ScriptedKiller({point: [1]})])
+
+
+def test_wall_clock_killer(ragged_reference):
+    """The unscripted demo path: the kill position is chosen by the clock;
+    wherever it lands, the finished factorization is bit-identical."""
+    A, ref = ragged_reference
+    killer = WallClockKiller(after_s=0.0, lane=2)  # strike at first boundary
+    got = ft_caqr_sweep_online(A, SimComm(RP), RB, fault_hooks=[killer])
+    _assert_bit_identical(got, ref)
+    assert killer.struck_at is not None
+    assert [(e.point, e.lane) for e in got.events] == [(killer.struck_at, 2)]
+
+
+# -- suspend / persist / resume ----------------------------------------------
+
+
+def test_suspend_resume_npz_round_trip(tmp_path, ragged_reference):
+    """Suspend mid-sweep to an .npz, reload (numpy-only round trip), resume
+    in a fresh state machine: bit-identical finish. Exercises the
+    repro.ckpt wire format the way a new process would."""
+    A, ref = ragged_reference
+    comm = SimComm(RP)
+    s = initial_sweep_state(comm, A, RB)
+    for _ in range(7):
+        s = sweep_step(comm, s)
+    cursor_at_save = s.cursor
+    path = save_sweep_state(os.path.join(str(tmp_path), "mid_sweep"), s)
+
+    # host-side inspection needs no device arrays at all
+    host = load_sweep_state(path, to_device=False)
+    assert host.cursor == cursor_at_save
+    assert all(isinstance(x, np.ndarray)
+               for x in jax.tree_util.tree_leaves(host))
+    assert host.geom == s.geom
+
+    # resume in a fresh orchestrator ("new process": only the file crosses)
+    resumed = SweepOrchestrator.from_state(
+        load_sweep_state(path), SimComm(RP)).run()
+    _assert_bit_identical(resumed, ref)
+
+
+def test_suspend_resume_with_failure_after_resume(tmp_path, ragged_reference):
+    """A lane dies *after* the resume: the restored state carries every
+    recovery bundle, so REBUILD still works and still matches the oracle."""
+    A, ref = ragged_reference
+    comm = SimComm(RP)
+    s = initial_sweep_state(comm, A, RB)
+    for _ in range(4):
+        s = sweep_step(comm, s)
+    path = save_sweep_state(os.path.join(str(tmp_path), "mid"), s)
+    point = sweep_point(2, "trailing", 0)
+    got = SweepOrchestrator.from_state(
+        load_sweep_state(path), SimComm(RP),
+        fault_hooks=[ScriptedKiller({point: [0]})]).run()
+    _assert_bit_identical(got, ref)
+    assert [(e.point, e.lane) for e in got.events] == [(point, 0)]
+
+
+def test_host_wire_format_identity(ragged_reference):
+    """to_host/from_host is the identity on arrays, cursor, and geometry."""
+    A, _ = ragged_reference
+    comm = SimComm(RP)
+    s = initial_sweep_state(comm, A, RB)
+    for _ in range(9):
+        s = sweep_step(comm, s)
+    s2 = sweep_state_from_host(sweep_state_to_host(s))
+    assert s2.cursor == s.cursor and s2.geom == s.geom
+    for a, b_ in zip(_leaves(s), _leaves(s2)):
+        assert np.array_equal(a, b_)
+
+
+def test_diskless_store_snapshot_and_restore(ragged_reference):
+    """The orchestrator's persist hook: diskless snapshots every N
+    boundaries; a successor restores the latest and finishes bitwise."""
+    A, ref = ragged_reference
+    store = SweepStateStore(keep=2)
+    SweepOrchestrator(A, SimComm(RP), RB, store=store, persist_every=4).run()
+    assert len(store) == 2
+    assert store.restore().cursor is None  # final boundary also pushed
+    mid = store.restore(back=1)
+    assert mid.cursor is not None
+    got = SweepOrchestrator.from_state(mid, SimComm(RP)).run()
+    _assert_bit_identical(got, ref)
+
+
+# -- slow tier: exhaustive online matrix on the aligned square sweep ---------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lane", range(4))
+def test_online_kill_matrix_aligned_exhaustive(lane):
+    P, m_loc, n, b = 4, 8, 16, 4
+    A = _matrix(P, m_loc, n, seed=0)
+    comm = SimComm(P)
+    ref = caqr_factorize(A, comm, b, collect_bundles=True, use_scan=False)
+    for point in iter_sweep_points(n // b, LEVELS):
+        got = ft_caqr_sweep_online(
+            A, comm, b, fault_hooks=[ScriptedKiller({point: [lane]})])
+        for g, r in zip(_leaves(got.R, got.factors, got.bundles),
+                        _leaves(ref.R, ref.factors, ref.bundles)):
+            assert np.array_equal(g, r)

@@ -76,6 +76,57 @@ def test_ft_sweep_spmd_differential():
     assert "DIFFERENTIAL_OK" in out
 
 
+def test_ft_sweep_online_spmd_differential():
+    """The online path on the production mesh: shard_map sweep_step
+    segments + host-side NaN-sentinel detection. Failure-free stepped
+    execution and a runtime-detected kill are both bitwise-identical to the
+    trace-time-scheduled shard_map run AND to the SimComm run (the §9
+    scheduled-vs-online equivalence, on real devices)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SimComm
+        from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+        from repro.ft.online.detect import ScriptedKiller
+        from repro.launch.spmd_qr import (
+            ft_caqr_sweep_online_spmd, ft_caqr_sweep_spmd, make_lane_mesh)
+
+        mesh = make_lane_mesh(4)
+        P_, m_loc, n, b = 4, 6, 10, 4   # the ragged PR-3 geometry
+        rng = np.random.default_rng(3)
+        A = jnp.asarray(rng.standard_normal((P_ * m_loc, n)), jnp.float32)
+
+        def leaves(r):
+            return [np.asarray(x) for x in
+                    jax.tree_util.tree_leaves((r.R, r.factors, r.bundles))]
+
+        def check(tag, got, sched, sim):
+            for g, s, m in zip(leaves(got), leaves(sched), leaves(sim)):
+                assert np.array_equal(g, s), f"{tag}: online != scheduled spmd"
+                assert np.array_equal(g, m), f"{tag}: online != simcomm"
+            assert ([(e.point, e.lane, e.reads) for e in got.events]
+                    == [(e.point, e.lane, e.reads) for e in sched.events]), tag
+            print("OK", tag)
+
+        # failure-free: stepped shard_map == monolithic shard_map == SimComm
+        check("online-free",
+              ft_caqr_sweep_online_spmd(A, b, mesh=mesh),
+              ft_caqr_sweep_spmd(A, b, mesh=mesh),
+              ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b))
+
+        # runtime-detected kill == the same kill as a trace-time schedule
+        pt = sweep_point(1, "trailing", 0)
+        sched = FailureSchedule(events={pt: [3]})
+        check("online-kill",
+              ft_caqr_sweep_online_spmd(
+                  A, b, mesh=mesh, fault_hooks=[ScriptedKiller({pt: [3]})]),
+              ft_caqr_sweep_spmd(A, b, schedule=sched, mesh=mesh),
+              ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b,
+                            schedule=sched))
+        print("ONLINE_SPMD_OK")
+    """)
+    assert "ONLINE_SPMD_OK" in out
+
+
 def test_ft_sweep_spmd_unrecoverable_at_trace_time():
     """A buddy-pair death is detected while tracing the shard_map program —
     the schedule is static data, so the SPMD path refuses before any device

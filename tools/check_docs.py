@@ -33,6 +33,7 @@ REQUIRED_HEADINGS = {
         "## 5. Recovery data-flow",
         "## 7. Ragged-panel geometry and padding semantics",
         "## 8. SPMD execution model",
+        "## 9. Online recovery and the sweep state machine",
     ],
 }
 

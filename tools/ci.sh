@@ -57,6 +57,7 @@ fi
 echo "== example smoke =="
 python examples/quickstart.py
 python examples/failure_recovery_training.py --steps 8
+python examples/online_recovery.py   # runtime-detected kill + suspend/resume
 
 echo "== SPMD smoke (shard_map FT sweep on a forced 4-device host mesh) =="
 python examples/spmd_quickstart.py
@@ -65,7 +66,8 @@ echo "== repro.ft API doctest examples =="
 python -m doctest src/repro/ft/driver.py src/repro/ft/failures.py \
     src/repro/ft/semantics.py && echo "doctests OK"
 
-echo "== benchmark smoke (writes BENCH_core.json) =="
+echo "== benchmark smoke (writes BENCH_core.json; fails loudly if the =="
+echo "== online stepped overhead regresses >25% over the recorded baseline =="
 python -m benchmarks.run --quick
 
 echo "CI OK"
