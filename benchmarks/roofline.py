@@ -10,6 +10,11 @@ Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 
 Also reports MODEL_FLOPS / HLO_FLOPS (useful-compute ratio; catches remat and
 dispatch waste) and names the dominant term with a one-line lever.
+
+``kernel_rows`` ingests the structured kernel rows from
+``benchmarks.bench_core.bench_kernels`` (an analytic flops/bytes model per
+op cell) and projects each cell's arithmetic intensity against the same
+roofline — the per-kernel dominant-term lever for the fast path.
 """
 from __future__ import annotations
 
@@ -29,6 +34,16 @@ ICI_BW = 50e9           # bytes/s / link (per direction)
 HLO_FLOPS_CALIBRATION = 2.0
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+LEVERS = {
+    "compute": "reduce non-useful flops (remat policy, dispatch padding, "
+               "masked attention work)",
+    "memory": "increase arithmetic intensity (fuse ops, larger tiles, "
+              "bf16 intermediates, avoid activation round-trips)",
+    "collective": "re-shard to cut gathered bytes (2D sharding, "
+                  "overlap collectives with compute, compress or "
+                  "reduce-scatter instead of all-reduce)",
+}
 
 
 def analyze(rec: Dict) -> Dict:
@@ -50,15 +65,7 @@ def analyze(rec: Dict) -> Dict:
     achievable = model_flops / chips / bound if bound else 0.0
     frac = achievable / PEAK_FLOPS if bound else 0.0
 
-    lever = {
-        "compute": "reduce non-useful flops (remat policy, dispatch padding, "
-                   "masked attention work)",
-        "memory": "increase arithmetic intensity (fuse ops, larger tiles, "
-                  "bf16 intermediates, avoid activation round-trips)",
-        "collective": "re-shard to cut gathered bytes (2D sharding, "
-                      "overlap collectives with compute, compress or "
-                      "reduce-scatter instead of all-reduce)",
-    }[dominant]
+    lever = LEVERS[dominant]
     return {
         "cell": f"{rec['arch']} x {rec['shape']} x {rec['mesh']}",
         "t_compute_s": t_compute,
@@ -70,6 +77,95 @@ def analyze(rec: Dict) -> Dict:
         "peak_gib": rec["memory"].get("peak_bytes_analytic", rec["memory"]["peak_bytes_est"]) / 2**30,
         "lever": lever,
     }
+
+
+# -- kernel-bench ingestion ---------------------------------------------------
+#
+# The structured kernel rows from benchmarks/bench_core.bench_kernels carry
+# (op, shape, dtype, measured us). Per cell we attach an analytic cost model
+# (2-flops-per-MAC convention, minimal HBM traffic: operands in + results
+# out once — the fused kernels' whole point) and project onto the TPU v5e
+# roofline above: arithmetic intensity vs the ridge names the dominant term
+# and its lever. The measured rate is the *host* microbenchmark rate — it
+# validates the algorithm, not the TPU projection.
+
+
+def _kernel_cost(op: str, shape, dtype: str):
+    """(flops, min_bytes) for one kernel cell. Shapes are the bench
+    geometries: panel_qr (m, b); stacked_qr (b,); wy_apply (m, b, n);
+    stacked_apply (b, n); fused_sweep (P, m_loc, n, b)."""
+    s = 2 if dtype == "bfloat16" else 4
+    if op == "panel_qr":
+        m, b = shape
+        # column loop 4mb^2 + Gram 2mb^2 + T recurrence 2b^3
+        return 6.0 * m * b * b + 2.0 * b ** 3, s * (2.0 * m * b + 2.0 * b * b)
+    if op == "stacked_qr":
+        (b,) = shape
+        # panel_qr cost at (2b, b)
+        return 14.0 * b ** 3, s * 5.0 * b * b
+    if op == "wy_apply":
+        m, b, n = shape
+        return 4.0 * m * b * n + 2.0 * b * b * n, \
+            s * (2.0 * m * n + m * b + b * b)
+    if op == "stacked_apply":
+        b, n = shape
+        return 6.0 * b * b * n, s * (5.0 * b * n + 2.0 * b * b)
+    if op == "fused_sweep":
+        P, m_loc, n, b = shape
+        levels = max(P.bit_length() - 1, 1)
+        leaf = 6.0 * m_loc * b * b + 2.0 * b ** 3          # panel QR
+        apply_ = 4.0 * m_loc * b * n + 2.0 * b * b * n     # WY window apply
+        tree = levels * (14.0 * b ** 3 + 6.0 * b * b * n)  # combines
+        # one window pass in + out is the fused path's traffic floor
+        return P * (leaf + apply_ + tree), s * P * 2.0 * m_loc * n
+    return 0.0, 0.0
+
+
+def kernel_rows(bench_rows: List[Dict]) -> List[Dict]:
+    """Roofline view of the structured kernel bench rows (rows whose name
+    starts with ``kernel_``); rows without a known cost model are skipped."""
+    out = []
+    for r in bench_rows:
+        if not r.get("name", "").startswith("kernel_"):
+            continue
+        op = r["name"][len("kernel_"):].replace("_bfloat16", "")
+        flops, bytes_ = _kernel_cost(op, tuple(r.get("shape", ())),
+                                     r.get("dtype", "float32"))
+        if not flops:
+            continue
+        ai = flops / bytes_
+        t_compute = flops / PEAK_FLOPS
+        t_memory = bytes_ / HBM_BW
+        dominant = "compute" if t_compute >= t_memory else "memory"
+        out.append({
+            "name": r["name"],
+            "engine": r.get("engine"),
+            "flops": flops,
+            "bytes": bytes_,
+            "intensity": ai,
+            "ridge": PEAK_FLOPS / HBM_BW,
+            "dominant": dominant,
+            "host_gflops": flops / max(r["us_per_call"], 1e-9) * 1e-3,
+            "speedup_vs_ref": r.get("speedup_vs_ref"),
+            "lever": LEVERS[dominant],
+        })
+    return out
+
+
+def print_kernel_rows(bench_rows: List[Dict]) -> None:
+    rows = kernel_rows(bench_rows)
+    if not rows:
+        return
+    print(f"{'cell':28s} {'engine':>9s} {'AI f/B':>8s} {'dominant':>9s} "
+          f"{'host GF/s':>10s} {'vs ref':>7s}")
+    for r in rows:
+        print(f"{r['name']:28s} {r['engine']:>9s} {r['intensity']:8.1f} "
+              f"{r['dominant']:>9s} {r['host_gflops']:10.1f} "
+              f"{r['speedup_vs_ref']:6.2f}x")
+    dom = max(rows, key=lambda r: r["flops"])
+    print(f"# dominant cell {dom['name']}: {dom['dominant']}-bound at "
+          f"AI {dom['intensity']:.1f} f/B (v5e ridge "
+          f"{dom['ridge']:.0f}) — lever: {dom['lever']}")
 
 
 def load_all(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:

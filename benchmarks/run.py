@@ -42,6 +42,10 @@ def main() -> None:
             rows.append(row)
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
 
+    print()
+    print("# kernel roofline (analytic arithmetic intensity, v5e projection)")
+    roofline.print_kernel_rows(rows)
+
     sweep = bench_core.bench_sweep_cost(quick=args.quick)
     print()
     print("# sweep cost per panel (windowed vs full-width trailing update)")
@@ -115,7 +119,11 @@ def main() -> None:
     # and a passing one is recorded with the damped-baseline floor so a
     # lucky-fast outlier cannot set a bar ordinary runs miss by noise
     ok, msg = bench_online.check_regression(online, baseline.get("online"))
+    # kernels-beat-oracle gate: intra-run (compiled rows vs their oracles),
+    # no baseline needed — but the verdict is recorded alongside the rows
+    kernel_ok, kernel_msg = bench_core.check_kernel_regression(rows)
     record = {"schema": 1, "quick": args.quick, "rows": rows,
+              "kernel_gate": {"ok": kernel_ok, "msg": kernel_msg},
               "sweep_cost": sweep, "recovery": recovery,
               "general_shapes": general, "spmd": spmd,
               "online": bench_online.baseline_to_record(
@@ -127,7 +135,8 @@ def main() -> None:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")
     print(f"# online regression gate: {msg}")
-    if not ok:
+    print(f"# kernel gate: {kernel_msg}")
+    if not ok or not kernel_ok:
         raise SystemExit(2)
 
     if not args.quick:

@@ -48,12 +48,13 @@ import jax
 
 from repro.core.comm import SimComm
 from repro.ft.driver import FTSweepResult, RecoveryEvent, recover_lanes
-from repro.ft.failures import LaneFailure, prev_sweep_point
+from repro.ft.failures import PHASE_LEAF, LaneFailure, prev_sweep_point
 from repro.ft.online.detect import NaNSentinelDetector, OnlineDetector
 from repro.ft.online.state import (
     SweepState,
     finalize,
     initial_sweep_state,
+    run_panel_fused,
     run_steps,
 )
 from repro.ft.semantics import Semantics
@@ -83,6 +84,14 @@ class SweepOrchestrator:
         Sweep points per compiled segment (>= 1). Larger segments amortize
         host/dispatch overhead but widen the detection-latency window —
         ``benchmarks/bench_online.py`` measures the tradeoff.
+    fused:
+        Run whole-panel fused segments (``run_panel_fused`` — the
+        ``kernels.fused_sweep`` megakernel path): O(1) dispatches per
+        panel instead of O(points * ops), with boundaries (detector polls,
+        hooks, persistence) at panel ends — the only legal fused
+        boundaries. Bitwise-identical results. ``segment_points`` is
+        ignored except to re-align a state resumed mid-panel. Mutually
+        exclusive with ``step_fn``.
     jit_segments:
         Compile segments with ``jax.jit`` (default). ``False`` runs them
         eagerly — slower, handy for debugging.
@@ -114,6 +123,7 @@ class SweepOrchestrator:
         detector: Optional[OnlineDetector] = None,
         *,
         segment_points: int = 1,
+        fused: bool = False,
         jit_segments: bool = True,
         step_fn: Optional[Callable[[SweepState], SweepState]] = None,
         fault_hooks: Sequence[FaultHook] = (),
@@ -132,6 +142,10 @@ class SweepOrchestrator:
         self.detector = detector if detector is not None else NaNSentinelDetector()
         assert segment_points >= 1
         self.segment_points = segment_points
+        assert not (fused and step_fn is not None), (
+            "fused segments replace the per-point runner; pass one or the "
+            "other")
+        self.fused = fused
         self.jit_segments = jit_segments
         self.step_fn = step_fn
         if step_fn is None and jit_segments:
@@ -161,6 +175,34 @@ class SweepOrchestrator:
 
     # -- segments ----------------------------------------------------------
 
+    def _stepped(self, state: SweepState, n_points: int) -> SweepState:
+        if not self.jit_segments:
+            return run_steps(self.comm, state, n_points)
+        key = (type(self.comm).__name__, self.comm.axis_size(), n_points)
+        fn = _SEGMENT_CACHE.get(key)
+        if fn is None:
+            comm = self.comm
+            fn = jax.jit(lambda s: run_steps(comm, s, n_points))
+            _SEGMENT_CACHE[key] = fn
+        return fn(state)
+
+    def _fused_segment(self, state: SweepState) -> SweepState:
+        # a state resumed mid-panel first steps to the next leaf boundary
+        # (fused segments only start there), then runs whole panels
+        while state.cursor is not None and state.cursor[1] != PHASE_LEAF:
+            state = self._stepped(state, 1)
+        if state.cursor is None:
+            return state
+        if not self.jit_segments:
+            return run_panel_fused(self.comm, state)
+        key = (type(self.comm).__name__, self.comm.axis_size(), "fused")
+        fn = _SEGMENT_CACHE.get(key)
+        if fn is None:
+            comm = self.comm
+            fn = jax.jit(lambda s: run_panel_fused(comm, s))
+            _SEGMENT_CACHE[key] = fn
+        return fn(state)
+
     def _segment(self, state: SweepState) -> SweepState:
         if self.step_fn is not None:
             for _ in range(self.segment_points):
@@ -168,16 +210,9 @@ class SweepOrchestrator:
                     break
                 state = self.step_fn(state)
             return state
-        if not self.jit_segments:
-            return run_steps(self.comm, state, self.segment_points)
-        key = (type(self.comm).__name__, self.comm.axis_size(),
-               self.segment_points)
-        fn = _SEGMENT_CACHE.get(key)
-        if fn is None:
-            comm, n = self.comm, self.segment_points
-            fn = jax.jit(lambda s: run_steps(comm, s, n))
-            _SEGMENT_CACHE[key] = fn
-        return fn(state)
+        if self.fused:
+            return self._fused_segment(state)
+        return self._stepped(state, self.segment_points)
 
     # -- the host loop -----------------------------------------------------
 

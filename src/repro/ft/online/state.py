@@ -320,6 +320,81 @@ def run_steps(comm, state: SweepState, max_points: Optional[int] = None
     return state
 
 
+def panel_points(geom: SweepGeometry) -> int:
+    """Sweep points per panel: leaf + L butterfly + L trailing levels."""
+    return 1 + 2 * geom.levels
+
+
+def run_panel_fused(comm, state: SweepState) -> SweepState:
+    """Execute ALL of panel ``k``'s points (leaf + L tsqr + L trailing) as
+    ONE fused dispatch — the megakernel path (``kernels.fused_sweep``).
+
+    The cursor must sit at a leaf point (panel boundaries are the only
+    legal fused boundaries — trailing level 0 needs the complete butterfly
+    ladder, so there is no intermediate fusion cut). The resulting state is
+    bitwise-identical to ``run_steps(comm, state, panel_points(geom))``:
+    the megakernel body runs the same core entry points over the same
+    ``SimComm`` program, and the panel-``(k-1)`` deposit stays outside the
+    kernel exactly as ``sweep_step`` runs it at the start of the
+    ``(k, leaf)`` segment.
+
+    Engine selection follows the ``fused_sweep`` policy slot: the Pallas
+    engines (compiled/interpret) embed ``SimComm`` and engage only under a
+    ``SimComm``; under ``AxisComm`` (or the ``xla`` engine) the same math
+    runs as one directly-traced call — still one dispatch per panel.
+    ``oracle`` mode falls back to stepping.
+    """
+    from repro.core.comm import SimComm
+    from repro.kernels import backend as _kbackend
+    from repro.kernels import fused_sweep as _fused
+
+    point = state.cursor
+    assert point is not None, "sweep already complete; call finalize"
+    k, phase, _lvl = point
+    assert phase == PHASE_LEAF, (
+        f"fused execution starts at a leaf boundary, cursor is at {point}")
+    geom = state.geom
+    L = state.levels
+
+    mode = _kbackend.kernel_mode("fused_sweep")
+    if mode == _kbackend.MODE_ORACLE or L < 1:
+        return run_steps(comm, state, panel_points(geom))
+
+    if k > 0:
+        state = _deposit_panel(comm, state, k - 1)
+    col0 = k * geom.b
+    window = comm.map_local(lambda A: A[:, col0:])(state.A)
+
+    use_pallas = isinstance(comm, SimComm) and (
+        mode == _kbackend.MODE_INTERPRET
+        or _kbackend.compiled_engine("fused_sweep") == _kbackend.ENGINE_PALLAS
+    )
+    if use_pallas:
+        res = _fused.fused_panel_pallas(
+            window, k=k, b=geom.b, m_loc_pad=geom.m_loc_pad, levels=L,
+            interpret=mode == _kbackend.MODE_INTERPRET,
+        )
+    else:
+        res = _fused.fused_panel_math(
+            comm, window, k, b=geom.b, m_loc_pad=geom.m_loc_pad, levels=L)
+
+    last = sweep_point(k, PHASE_TRAILING, L - 1)
+    return state.replace(
+        window=window,
+        leaf_Y=res["leaf_Y"], leaf_T=res["leaf_T"],
+        R_leaf=res["R_leaf"], R_carry=res["R_carry"],
+        Y2s=tuple(res["level_Y2"][l] for l in range(L)),
+        Ts=tuple(res["level_T"][l] for l in range(L)),
+        level_Y2=res["level_Y2"], level_T=res["level_T"],
+        C_local=res["C_local"], C_prime=res["C_prime"],
+        Ws=tuple(res["Ws"][l] for l in range(L)),
+        Cs_self=tuple(res["Cs_self"][l] for l in range(L)),
+        Cs_buddy=tuple(res["Cs_buddy"][l] for l in range(L)),
+        tops=tuple(res["tops"]),
+        cursor=next_sweep_point(last, geom.n_panels, L),
+    )
+
+
 # -- lane-axis bookkeeping ---------------------------------------------------
 
 _FACTORS_AXES = PanelFactors(

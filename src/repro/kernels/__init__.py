@@ -1,15 +1,17 @@
-"""Pallas TPU kernels for the CAQR compute hot-spots.
+"""Pallas kernels for the CAQR compute hot-spots.
 
-panel_qr   - Householder panel factorization (geqrt) in VMEM
-stacked_qr - TSQR tree combine (tpqrt) + fused trailing combine
-wy_apply   - fused compact-WY application C - Y (T^T (Y^T C))
+panel_qr    - Householder panel factorization (geqrt) in VMEM
+stacked_qr  - TSQR tree combine (tpqrt) + fused trailing combine
+wy_apply    - fused compact-WY application C - Y (T^T (Y^T C))
+fused_sweep - whole-panel sweep megakernel + fused leaf (panel QR + apply)
 
-ops.py is the dispatch seam ``repro.core`` routes through: jit'd wrappers
-that pad up to the kernels' alignment contract and fall back to the
-pure-jnp oracles in ref.py. backend.py holds the policy (when core
-dispatches here at all; interpret=Mosaic on TPU, interpreter elsewhere).
-See DESIGN.md §2.
+ops.py is the dispatch seam ``repro.core`` routes through: wrappers that
+resolve the per-op execution policy (compiled pallas / compiled xla /
+interpret / oracle — backend.py probes what this backend can lower), pad
+up to the pallas engines' alignment contract, consult the autotune.py
+block-shape cache, and fall back to the pure-jnp oracles in ref.py.
+See DESIGN.md §2 and §10.
 """
-from repro.kernels import backend, ops, ref
+from repro.kernels import autotune, backend, ops, ref
 
-__all__ = ["backend", "ops", "ref"]
+__all__ = ["autotune", "backend", "ops", "ref"]

@@ -1,36 +1,221 @@
 """Backend policy for the Pallas kernels — the single source of truth.
 
-Two independent decisions live here:
+Three independent decisions live here:
 
-* ``interpret_default()`` — HOW a kernel runs when it runs: compiled Mosaic
-  on TPU, ``interpret=True`` (traced-Python-over-VMEM-blocks) everywhere
-  else. Kernel modules take ``interpret=None`` and resolve it here; nothing
-  hardcodes ``interpret=True`` anymore.
+* ``kernel_mode(op)`` — HOW an op in ``repro.kernels.ops`` executes. A
+  capability-probed three-way policy per op::
+
+      compiled   the fast path. Engine ``pallas`` (a native, non-interpret
+                 ``pallas_call``) on any backend that lowers it — probed
+                 once per process per op by AOT-compiling a tiny instance —
+                 with automatic fallback to engine ``xla`` (the same tile
+                 program executed as plain compiled XLA, no interpreter
+                 machinery) where lowering fails.
+      interpret  the Pallas interpreter (traced-Python-over-VMEM-blocks).
+                 Slow; the validation vehicle for the kernel programs and
+                 the bit-compatibility gates. Never chosen automatically —
+                 request it explicitly (tests, parity matrices).
+      oracle     the pure-jnp reference in ``repro.kernels.ref``.
+
+* ``compiled_engine(op)`` — which compiled engine ``compiled`` resolves to:
+  ``pallas`` iff the per-op probe succeeded on this backend, else ``xla``.
 
 * ``dispatch_enabled()`` — WHETHER the core hot path (``repro.core``) routes
-  its panel/combine/apply operations through the kernels at all. Default:
-  only on TPU, where the fused kernels beat XLA's op-by-op lowering. On CPU
-  the interpret-mode kernels are a validation vehicle, not a fast path, so
-  core stays on the pure-jnp implementations unless forced.
+  its panel/combine/apply operations through ``ops`` at all. Default: only
+  on TPU, where the fused kernels beat XLA's op-by-op lowering. The ops
+  layer itself runs its best compiled engine on every backend.
 
 Overrides, strongest first:
   1. ``use_kernels(True/False)`` — programmatic (tests, benchmarks);
-     ``use_kernels(None)`` restores the automatic policy.
-  2. ``REPRO_NO_KERNELS=1``    — kill switch, wins over the backend default.
-  3. ``REPRO_FORCE_KERNELS=1`` — force the core dispatch on (parity tests
+     ``use_kernels(None)`` restores the automatic policy. True forces the
+     core dispatch on AND pins ops to its best kernel mode; False pins
+     everything to the oracle.
+  2. ``force_mode(mode, op=None)`` — programmatic per-op (or global) mode
+     pin; ``force_mode(None)`` clears.
+  3. ``REPRO_NO_KERNELS=1``    — kill switch, wins over the backend default.
+  4. ``REPRO_KERNEL_MODE=compiled|interpret|oracle|auto`` — global mode, and
+     ``REPRO_KERNEL_MODE_<OP>`` (e.g. ``REPRO_KERNEL_MODE_WY_APPLY``) per op.
+  5. ``REPRO_FORCE_KERNELS=1`` — force the core dispatch on (parity tests
      exercise the padded kernel path on CPU this way).
 
 Note the decisions are read at *trace* time: flipping a flag does not
 invalidate already-jitted callers. Tests flip flags before building jits.
+
+The autotune cache (``repro.kernels.autotune``) is keyed by
+``backend_fingerprint()`` so tuned block shapes never leak across machines
+or backend/jax upgrades.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
+import warnings
+from typing import Dict, Optional
 
 import jax
 
 _OVERRIDE: Optional[bool] = None
+
+# -- kernel modes ------------------------------------------------------------
+
+MODE_COMPILED = "compiled"
+MODE_INTERPRET = "interpret"
+MODE_ORACLE = "oracle"
+MODE_AUTO = "auto"
+KERNEL_MODES = (MODE_COMPILED, MODE_INTERPRET, MODE_ORACLE)
+
+ENGINE_PALLAS = "pallas"
+ENGINE_XLA = "xla"
+
+# Every op the ops layer dispatches (fused_sweep is the multi-point
+# megakernel in repro.kernels.fused_sweep).
+OPS = ("panel_qr", "stacked_qr", "wy_apply", "stacked_apply", "fused_sweep")
+
+_MODE_OVERRIDE: Dict[str, str] = {}  # op (or "*") -> mode
+
+
+def use_kernels(flag: Optional[bool]) -> None:
+    """Force the core->kernel dispatch on/off; None = automatic policy."""
+    global _OVERRIDE
+    _OVERRIDE = flag
+
+
+def force_mode(mode: Optional[str], op: Optional[str] = None) -> None:
+    """Pin ``kernel_mode`` for one op (or all ops when ``op is None``).
+    ``force_mode(None)`` / ``force_mode(None, op)`` clears the pin(s)."""
+    key = "*" if op is None else op
+    if mode is None:
+        if op is None:
+            _MODE_OVERRIDE.clear()
+        else:
+            _MODE_OVERRIDE.pop(key, None)
+        return
+    assert mode in KERNEL_MODES + (MODE_AUTO,), mode
+    _MODE_OVERRIDE[key] = mode
+
+
+def _env_mode(op: str) -> Optional[str]:
+    for key in (f"REPRO_KERNEL_MODE_{op.upper()}", "REPRO_KERNEL_MODE"):
+        val = os.environ.get(key, "").strip().lower()
+        if val:
+            if val not in KERNEL_MODES + (MODE_AUTO,):
+                warnings.warn(f"{key}={val!r} is not one of "
+                              f"{KERNEL_MODES + (MODE_AUTO,)}; ignoring")
+                return None
+            return val
+    return None
+
+
+def kernel_mode(op: str) -> str:
+    """Resolve the execution mode for ``op``: compiled | interpret | oracle.
+
+    Read at trace time by ``repro.kernels.ops``. ``auto`` (the default)
+    resolves to ``compiled`` — the engine probe decides pallas vs xla.
+    """
+    assert op in OPS, op
+    if _OVERRIDE is False:
+        return MODE_ORACLE
+    mode = _MODE_OVERRIDE.get(op, _MODE_OVERRIDE.get("*"))
+    if _OVERRIDE is True and mode is None:
+        return MODE_COMPILED
+    if os.environ.get("REPRO_NO_KERNELS", "0") == "1" and mode is None:
+        return MODE_ORACLE
+    if mode is None:
+        mode = _env_mode(op) or MODE_AUTO
+    if mode == MODE_AUTO:
+        return MODE_COMPILED
+    return mode
+
+
+# -- compiled-capability probe (once per process per op) ---------------------
+
+_PROBE_CACHE: Dict[str, bool] = {}
+_PROBE_ERRORS: Dict[str, str] = {}
+
+
+def _probe_compiled(op: str) -> bool:
+    """AOT-lower + compile a tiny aligned instance of ``op``'s Pallas kernel
+    with ``interpret=False`` on the default backend. No execution — safe to
+    call from inside an active trace (it opens its own)."""
+    import jax.numpy as jnp
+
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    try:
+        if op == "panel_qr":
+            from repro.kernels import panel_qr as m
+            fn = lambda a, rs: m.panel_qr(a, rs, interpret=False)
+            args = (s((136, 128), f32), s((), jnp.int32))
+        elif op == "stacked_qr":
+            from repro.kernels import stacked_qr as m
+            fn = lambda a, b_: m.stacked_qr(a, b_, interpret=False)
+            args = (s((128, 128), f32), s((128, 128), f32))
+        elif op == "wy_apply":
+            from repro.kernels import wy_apply as m
+            fn = lambda y, t, c: m.wy_apply(y, t, c, block_n=128,
+                                            interpret=False)
+            args = (s((128, 128), f32), s((128, 128), f32), s((128, 128), f32))
+        elif op == "stacked_apply":
+            from repro.kernels import stacked_qr as m
+            fn = lambda y2, t, ct, cb: m.stacked_apply(
+                y2, t, ct, cb, block_n=128, interpret=False)
+            args = (s((128, 128), f32),) * 4
+        elif op == "fused_sweep":
+            from repro.kernels import fused_sweep as m
+            fn = lambda w: m.panel_qr_apply(w, 0, 8, interpret=False)
+            args = (s((16, 16), f32),)
+        else:  # pragma: no cover - OPS is closed
+            return False
+        jax.jit(fn).lower(*args).compile()
+        return True
+    except Exception as e:  # noqa: BLE001 - any lowering failure => no pallas
+        _PROBE_ERRORS[op] = f"{type(e).__name__}: {e}"
+        return False
+
+
+def compiled_supported(op: str) -> bool:
+    """Does this backend lower ``op``'s Pallas kernel natively? Probed once
+    per process; ``probe_report()`` has the failure reasons."""
+    if op not in _PROBE_CACHE:
+        _PROBE_CACHE[op] = _probe_compiled(op)
+    return _PROBE_CACHE[op]
+
+
+def compiled_engine(op: str) -> str:
+    """Which engine ``compiled`` mode runs for ``op``: ``pallas`` iff the
+    probe passed, else ``xla`` (the tile program as plain compiled XLA)."""
+    return ENGINE_PALLAS if compiled_supported(op) else ENGINE_XLA
+
+
+def probe_report() -> Dict[str, Dict[str, str]]:
+    """Probe every op; return {op: {supported, engine, error?}} — the
+    compiled-kernel smoke tier (``tools/kernel_smoke.py``) prints this."""
+    report = {}
+    for op in OPS:
+        ok = compiled_supported(op)
+        entry = {"supported": ok, "engine": compiled_engine(op)}
+        if not ok and op in _PROBE_ERRORS:
+            entry["error"] = _PROBE_ERRORS[op]
+        report[op] = entry
+    return report
+
+
+def reset_probe_cache() -> None:
+    """Drop probe results (tests only — e.g. after monkeypatching)."""
+    _PROBE_CACHE.clear()
+    _PROBE_ERRORS.clear()
+
+
+def backend_fingerprint() -> str:
+    """Stable identity of (backend, device kind, jax version) — the autotune
+    cache key, so tuned shapes never leak across machines or upgrades."""
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # noqa: BLE001 - no devices (docs builds)
+        kind = "unknown"
+    return f"{jax.default_backend()}:{kind}:jax-{jax.__version__}"
+
+
+# -- legacy interpret seam (kept: kernel modules resolve interpret=None) -----
 
 
 def interpret_default() -> bool:
@@ -43,10 +228,7 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     return interpret_default() if interpret is None else interpret
 
 
-def use_kernels(flag: Optional[bool]) -> None:
-    """Force the core->kernel dispatch on/off; None = automatic policy."""
-    global _OVERRIDE
-    _OVERRIDE = flag
+# -- core dispatch (whether repro.core routes through ops at all) ------------
 
 
 def dispatch_enabled() -> bool:
@@ -61,23 +243,31 @@ def dispatch_enabled() -> bool:
 
 
 def ops_kernels_enabled() -> bool:
-    """Should ops.* run its Pallas kernel (vs. the jnp oracle)?
+    """Should ops.* run a kernel engine (vs. the jnp oracle)?
 
-    Unlike the core dispatch, ops defaults to the kernel on every backend —
-    interpret mode on CPU is how the kernels are validated. Shares the
-    ``use_kernels`` override and the env kill switch with the core dispatch
-    so the two layers can never disagree (both read at call/trace time).
+    Compatibility shim over the per-op policy: True iff no op is pinned to
+    the oracle globally. Shares the ``use_kernels`` override and the env
+    kill switch with the core dispatch so the two layers can never disagree
+    (both read at call/trace time).
     """
-    if _OVERRIDE is not None:
-        return _OVERRIDE
-    return os.environ.get("REPRO_NO_KERNELS", "0") != "1"
+    return kernel_mode("panel_qr") != MODE_ORACLE
 
 
-# Alignment contract (f32 VREG/MXU tiling): panel rows in sublane multiples,
-# panel widths in lane multiples. ``ops`` pads up to the contract and slices
-# back, so callers never see it — but aligned shapes skip the copies.
+# Alignment contract (VREG/MXU tiling): panel rows in sublane multiples,
+# panel widths in lane multiples. The contract belongs to the *pallas*
+# engines (Mosaic tiles / the interpreter's block model); the xla engine
+# runs at natural shapes. ``ops`` pads up to the contract and slices back,
+# so callers never see it — but aligned shapes skip the copies. Sublane is
+# dtype-dependent: (8, 128) packs f32, (16, 128) bf16.
 SUBLANE = 8
 LANE = 128
+
+
+def sublane(dtype) -> int:
+    """Second-to-last-dim tile multiple for ``dtype`` (f32: 8, bf16: 16)."""
+    import jax.numpy as jnp
+
+    return 16 if dtype == jnp.bfloat16 else SUBLANE
 
 
 def pad_to(x: int, mult: int) -> int:

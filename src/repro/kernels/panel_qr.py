@@ -29,10 +29,32 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _panel_qr_kernel(rs_ref, a_ref, y_ref, t_ref, r_ref, *, num_cols: int):
-    m, b = a_ref.shape
-    row_start = rs_ref[0]
-    A = a_ref[...]
+def unrolled_loop(num_steps: int, body, init, unroll: int = 1):
+    """``fori_loop(0, num_steps, body, init)`` with an ``unroll`` factor.
+
+    ``unroll=1`` is the plain fori_loop (the conservative form the pallas
+    kernel bodies lower); larger factors replicate the body inside a scan
+    step — same operations in the same order, so results are unchanged, but
+    the backend's per-iteration loop overhead is amortized. On CPU that
+    overhead dominates these small-body column loops, which is what makes
+    ``unroll`` the autotune knob for the ``xla`` engine (autotune.py).
+    """
+    if unroll == 1:
+        return jax.lax.fori_loop(0, num_steps, body, init)
+    return jax.lax.scan(
+        lambda carry, j: (body(j, carry), None),
+        init, jnp.arange(num_steps), unroll=unroll,
+    )[0]
+
+
+def panel_qr_math(A: jax.Array, row_start: jax.Array, *, num_cols: int,
+                  unroll: int = 1):
+    """The kernel's tile program on plain arrays: (Y, T, R) of the masked
+    panel QR. Shared verbatim by the pallas kernel body and the ``xla``
+    compiled engine (``panel_qr_xla``) so the two execute the same
+    floating-point program (``unroll`` only changes loop scheduling, not
+    the operation sequence)."""
+    m, b = A.shape
     rows = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)[:, 0]
     dtype = A.dtype
 
@@ -57,8 +79,8 @@ def _panel_qr_kernel(rs_ref, a_ref, y_ref, t_ref, r_ref, *, num_cols: int):
         taus_ = taus_.at[j].set(tau)
         return A_, Y_, taus_
 
-    A_out, Y, taus = jax.lax.fori_loop(
-        0, num_cols, col_step, (A, A * 0.0, A[0] * 0.0)
+    A_out, Y, taus = unrolled_loop(
+        num_cols, col_step, (A, A * 0.0, A[0] * 0.0), unroll
     )
 
     # T forward recurrence over the Gram matrix (all VMEM-resident).
@@ -72,14 +94,29 @@ def _panel_qr_kernel(rs_ref, a_ref, y_ref, t_ref, r_ref, *, num_cols: int):
         col = col.at[j].set(taus[j])
         return T.at[:, j].set(col)
 
-    T = jax.lax.fori_loop(0, num_cols, t_step, G * 0.0)
+    T = unrolled_loop(num_cols, t_step, G * 0.0, unroll)
 
     # R = rows [row_start, row_start + b) of the transformed tile.
     R_rows = jax.lax.dynamic_slice(A_out, (row_start, 0), (b, b))
     tri = cols[:, None] <= cols[None, :]
+    return Y, T, jnp.where(tri, R_rows, 0.0)
+
+
+def _panel_qr_kernel(rs_ref, a_ref, y_ref, t_ref, r_ref, *, num_cols: int):
+    Y, T, R = panel_qr_math(a_ref[...], rs_ref[0], num_cols=num_cols)
     y_ref[...] = Y
     t_ref[...] = T
-    r_ref[...] = jnp.where(tri, R_rows, 0.0)
+    r_ref[...] = R
+
+
+@functools.partial(jax.jit, static_argnames=("unroll",))
+def panel_qr_xla(A: jax.Array, row_start: jax.Array, *, unroll: int = 2):
+    """The ``xla`` compiled engine: the tile program as plain compiled XLA —
+    the fast path on backends whose Pallas can't lower natively (probed in
+    ``backend``). No alignment contract: runs at natural shapes. ``unroll``
+    is the engine's autotune knob (column-loop unroll factor)."""
+    rs = jnp.asarray(row_start, jnp.int32)
+    return panel_qr_math(A, rs, num_cols=A.shape[1], unroll=unroll)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

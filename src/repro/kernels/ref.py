@@ -18,6 +18,24 @@ import jax.numpy as jnp
 
 from repro.core import householder as hh
 
+# (rtol, atol) for kernel-vs-oracle comparisons, keyed by dtype. The old
+# hardcoded 3e-4 was f32-only: at bf16 (8 mantissa bits, eps ~= 7.8e-3) it
+# made parity tests fail spuriously — or, with inputs small enough, pass
+# without testing anything. Everything comparing a kernel against these
+# oracles must go through ``tolerances``.
+_TOLERANCES = {
+    "float32": (3e-4, 3e-4),
+    "bfloat16": (5e-2, 5e-2),
+    "float16": (2e-2, 2e-2),
+    "float64": (1e-12, 1e-12),
+}
+
+
+def tolerances(dtype) -> Tuple[float, float]:
+    """(rtol, atol) appropriate for comparing kernel output against the
+    oracle at ``dtype``. Unknown dtypes get the f32 pair."""
+    return _TOLERANCES.get(jnp.dtype(dtype).name, _TOLERANCES["float32"])
+
 
 def panel_qr(A: jax.Array, row_start) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(Y, T, R) of the masked Householder panel QR."""

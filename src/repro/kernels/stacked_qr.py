@@ -23,14 +23,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.panel_qr import unrolled_loop
 
-def _stacked_qr_kernel(rt_ref, rb_ref, y2_ref, t_ref, r_ref, *, b: int):
+
+def stacked_qr_math(R_top: jax.Array, R_bot: jax.Array, *, b: int,
+                    unroll: int = 1):
+    """The combine's tile program on plain arrays: (Y2, T, R) of
+    QR([R_top; R_bot]). Shared by the pallas kernel body and the ``xla``
+    compiled engine so both execute the same floating-point program."""
     # Build the 2b x b stack in VMEM; the masked column loop preserves the
     # triangular structure exactly (top block of Y is I, bottom is triu).
     cols = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)[:, 0]
     tri = cols[:, None] <= cols[None, :]
     S = jnp.concatenate(
-        [jnp.where(tri, rt_ref[...], 0.0), jnp.where(tri, rb_ref[...], 0.0)],
+        [jnp.where(tri, R_top, 0.0), jnp.where(tri, R_bot, 0.0)],
         axis=0,
     )
     m = 2 * b
@@ -57,7 +63,8 @@ def _stacked_qr_kernel(rt_ref, rb_ref, y2_ref, t_ref, r_ref, *, b: int):
         taus_ = taus_.at[j].set(tau)
         return A_, Y_, taus_
 
-    A_out, Y, taus = jax.lax.fori_loop(0, b, col_step, (S, S * 0.0, S[0] * 0.0))
+    A_out, Y, taus = unrolled_loop(b, col_step, (S, S * 0.0, S[0] * 0.0),
+                                   unroll)
 
     G = Y.T @ Y
 
@@ -68,11 +75,23 @@ def _stacked_qr_kernel(rt_ref, rb_ref, y2_ref, t_ref, r_ref, *, b: int):
         col = col.at[j].set(taus[j])
         return T.at[:, j].set(col)
 
-    T = jax.lax.fori_loop(0, b, t_step, G * 0.0)
+    T = unrolled_loop(b, t_step, G * 0.0, unroll)
 
-    y2_ref[...] = jnp.where(tri, Y[b:, :], 0.0)
+    return (jnp.where(tri, Y[b:, :], 0.0), T, jnp.where(tri, A_out[:b, :], 0.0))
+
+
+def _stacked_qr_kernel(rt_ref, rb_ref, y2_ref, t_ref, r_ref, *, b: int):
+    Y2, T, R = stacked_qr_math(rt_ref[...], rb_ref[...], b=b)
+    y2_ref[...] = Y2
     t_ref[...] = T
-    r_ref[...] = jnp.where(tri, A_out[:b, :], 0.0)
+    r_ref[...] = R
+
+
+@functools.partial(jax.jit, static_argnames=("unroll",))
+def stacked_qr_xla(R_top: jax.Array, R_bot: jax.Array, *, unroll: int = 2):
+    """The ``xla`` compiled engine for the tree combine (natural shapes);
+    ``unroll`` is its autotune knob (column-loop unroll factor)."""
+    return stacked_qr_math(R_top, R_bot, b=R_top.shape[0], unroll=unroll)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -97,18 +116,30 @@ def stacked_qr(R_top: jax.Array, R_bot: jax.Array, *, interpret: bool | None = N
     return Y2, T, R
 
 
-def _stacked_apply_kernel(y2_ref, t_ref, ct_ref, cb_ref, ot_ref, ob_ref, w_ref):
-    Y2 = y2_ref[...]
-    T = t_ref[...]
-    Ct = ct_ref[...]
-    Cb = cb_ref[...]
+def stacked_apply_math(Y2, T, Ct, Cb):
+    """The trailing-combine tile program (f32 accumulation) on plain
+    arrays; returns (Ct_hat, Cb_hat, W) in ``Ct.dtype``."""
     inner = Ct + jnp.dot(Y2.T, Cb, preferred_element_type=jnp.float32)
     W = jnp.dot(T.T, inner, preferred_element_type=jnp.float32)
-    ot_ref[...] = (Ct - W).astype(ot_ref.dtype)
-    ob_ref[...] = (Cb - jnp.dot(Y2, W, preferred_element_type=jnp.float32)).astype(
-        ob_ref.dtype
-    )
+    ot = (Ct - W).astype(Ct.dtype)
+    ob = (Cb - jnp.dot(Y2, W, preferred_element_type=jnp.float32)).astype(Ct.dtype)
+    return ot, ob, W.astype(Ct.dtype)
+
+
+def _stacked_apply_kernel(y2_ref, t_ref, ct_ref, cb_ref, ot_ref, ob_ref, w_ref):
+    ot, ob, W = stacked_apply_math(y2_ref[...], t_ref[...], ct_ref[...],
+                                   cb_ref[...])
+    ot_ref[...] = ot.astype(ot_ref.dtype)
+    ob_ref[...] = ob.astype(ob_ref.dtype)
     w_ref[...] = W.astype(w_ref.dtype)
+
+
+@jax.jit
+def stacked_apply_xla(Y2, T, C_top, C_bot):
+    """The ``xla`` compiled engine for the fused trailing combine. Column
+    tiling is dropped: every op here is column-parallel (all reductions run
+    over rows), so the untiled call is the same floating-point program."""
+    return stacked_apply_math(Y2, T, C_top, C_bot)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -30,15 +30,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _wy_apply_kernel(y_ref, t_ref, c_ref, o_ref):
-    Y = y_ref[...]
-    T = t_ref[...]
-    C = c_ref[...]
+def wy_apply_math(Y, T, C):
+    """The tile program on plain arrays (f32 accumulation); shared by the
+    pallas kernel body and the ``xla`` compiled engine."""
     W1 = jnp.dot(Y.T, C, preferred_element_type=jnp.float32)
     W = jnp.dot(T.T, W1, preferred_element_type=jnp.float32)
-    o_ref[...] = (C - jnp.dot(Y, W, preferred_element_type=jnp.float32)).astype(
+    return (C - jnp.dot(Y, W, preferred_element_type=jnp.float32)).astype(C.dtype)
+
+
+def _wy_apply_kernel(y_ref, t_ref, c_ref, o_ref):
+    o_ref[...] = wy_apply_math(y_ref[...], t_ref[...], c_ref[...]).astype(
         o_ref.dtype
     )
+
+
+@jax.jit
+def wy_apply_xla(Y, T, C):
+    """The ``xla`` compiled engine: untiled — the column grid only changes
+    which columns a program instance touches, never a reduction grouping
+    (all dots reduce over rows), so this is the same floating-point
+    program as the tiled kernel."""
+    return wy_apply_math(Y, T, C)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -1,0 +1,213 @@
+"""Fused whole-panel megakernel vs the stepped sweep: the bitwise gates.
+
+DESIGN.md §10's fusion contract: ``run_panel_fused`` executes all of panel
+``k``'s points (leaf + L tsqr + L trailing) as one dispatch, and the
+resulting boundary state — and therefore every downstream output — is
+**bitwise identical** to iterating ``sweep_step`` over the same points,
+because the megakernel body runs the same core entry points over the same
+comm. Gated here at every panel boundary on aligned, ragged, and wide
+``b = 4`` geometries, through the xla engine and the forced Pallas
+interpreter, under the orchestrator (failure-free and with a runtime kill
+at a panel boundary), and under ``shard_map`` on a forced 4-device mesh.
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from spmd_subprocess_util import run_forced_devices
+
+from repro.core import SimComm, caqr_factorize
+from repro.ft import FailureSchedule, SweepOrchestrator, ft_caqr_sweep, sweep_point
+from repro.ft.failures import PHASE_LEAF
+from repro.ft.online.detect import ScriptedKiller
+from repro.ft.online.state import (
+    finalize,
+    initial_sweep_state,
+    panel_points,
+    run_panel_fused,
+    sweep_step,
+)
+from repro.kernels import backend
+
+# (tag, P, m_loc, n, b) — the PR-3 geometry classes at the gate's b = 4
+GEOMS = [
+    ("aligned", 4, 8, 16, 4),
+    ("ragged", 4, 6, 10, 4),
+    ("wide", 4, 4, 40, 4),
+]
+
+
+def _matrix(P, m_loc, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_states_bitwise(got, want, tag):
+    gl, wl = _leaves(got), _leaves(want)
+    assert len(gl) == len(wl), tag
+    for g, w in zip(gl, wl):
+        assert g.shape == w.shape and g.dtype == w.dtype, tag
+        assert np.array_equal(g, w), f"{tag}: fused boundary state differs"
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=lambda g: g[0])
+def test_fused_panel_bitwise_vs_stepped(geom):
+    """Panel by panel: run_panel_fused == panel_points(geom) sweep_steps,
+    bit for bit, at EVERY panel boundary — then identical finalize."""
+    tag, P, m_loc, n, b = geom
+    comm = SimComm(P)
+    A = _matrix(P, m_loc, n)
+    step = jax.jit(functools.partial(sweep_step, comm))
+    fused = jax.jit(functools.partial(run_panel_fused, comm))
+    s_stepped = initial_sweep_state(comm, A, b)
+    s_fused = s_stepped
+    pts = panel_points(s_stepped.geom)
+    for k in range(s_stepped.geom.n_panels):
+        assert s_fused.cursor == (k, PHASE_LEAF, 0)
+        s_fused = fused(s_fused)
+        for _ in range(pts):
+            s_stepped = step(s_stepped)
+        _assert_states_bitwise(s_fused, s_stepped, f"{tag}-panel{k}")
+    assert s_fused.cursor is None
+    _assert_states_bitwise(finalize(comm, s_fused),
+                           finalize(comm, s_stepped), f"{tag}-final")
+
+
+@pytest.mark.parametrize("mode", [backend.MODE_COMPILED,
+                                  backend.MODE_INTERPRET])
+def test_fused_routes_bitwise(mode):
+    """Both non-oracle routes of the fused_sweep policy slot — the compiled
+    engine and the forced Pallas interpreter (the SimComm-embedding
+    megakernel) — are bitwise vs stepping on the ragged geometry."""
+    _, P, m_loc, n, b = GEOMS[1]
+    comm = SimComm(P)
+    A = _matrix(P, m_loc, n, seed=7)
+    s0 = initial_sweep_state(comm, A, b)
+    pts = panel_points(s0.geom)
+    s_stepped = s0
+    for _ in range(pts):
+        s_stepped = sweep_step(comm, s_stepped)
+    backend.force_mode(mode, "fused_sweep")
+    try:
+        s_fused = run_panel_fused(comm, s0)
+    finally:
+        backend.force_mode(None, "fused_sweep")
+    _assert_states_bitwise(s_fused, s_stepped, f"route-{mode}")
+
+
+def test_fused_oracle_mode_falls_back_to_stepping():
+    """oracle mode must not lose panels: run_panel_fused degrades to
+    run_steps and still lands on the next leaf boundary."""
+    _, P, m_loc, n, b = GEOMS[0]
+    comm = SimComm(P)
+    s0 = initial_sweep_state(comm, _matrix(P, m_loc, n), b)
+    backend.force_mode(backend.MODE_ORACLE, "fused_sweep")
+    try:
+        s1 = run_panel_fused(comm, s0)
+    finally:
+        backend.force_mode(None, "fused_sweep")
+    assert s1.cursor == (1, PHASE_LEAF, 0)
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=lambda g: g[0])
+def test_orchestrator_fused_failure_free(geom):
+    """fused=True: same FTSweepResult as the monolithic sweep, with O(1)
+    segments per panel (segments_run == n_panels, not sum of points)."""
+    tag, P, m_loc, n, b = geom
+    comm = SimComm(P)
+    A = _matrix(P, m_loc, n)
+    ref = caqr_factorize(A, comm, b, collect_bundles=True, use_scan=False)
+    orch = SweepOrchestrator(A, comm, b, fused=True)
+    got = orch.run()
+    _assert_states_bitwise((got.R, got.factors, got.bundles),
+                           (ref.R, ref.factors, ref.bundles), tag)
+    assert got.events == []
+    assert orch.segments_run == orch.state.geom.n_panels
+
+
+def test_orchestrator_fused_kill_at_panel_boundary():
+    """A runtime kill discovered at a fused (panel-end) boundary recovers
+    bitwise-identically to the scheduled driver's kill at that point."""
+    _, P, m_loc, n, b = GEOMS[1]
+    comm = SimComm(P)
+    A = _matrix(P, m_loc, n)
+    levels = initial_sweep_state(comm, A, b).levels
+    point = sweep_point(1, "trailing", levels - 1)  # a panel end
+    ref = caqr_factorize(A, comm, b, collect_bundles=True, use_scan=False)
+    orch = SweepOrchestrator(
+        A, comm, b, fused=True,
+        fault_hooks=[ScriptedKiller({point: [2]})])
+    got = orch.run()
+    _assert_states_bitwise((got.R, got.factors, got.bundles),
+                           (ref.R, ref.factors, ref.bundles), "fused-kill")
+    sched = ft_caqr_sweep(A, comm, b,
+                          schedule=FailureSchedule(events={point: [2]}))
+    assert [(e.point, e.lane, e.reads) for e in got.events] == \
+        [(e.point, e.lane, e.reads) for e in sched.events]
+    assert orch.segments_run == orch.state.geom.n_panels
+
+
+def test_fused_resume_mid_panel_realigns():
+    """A state resumed mid-panel (e.g. from a persisted stepped run) first
+    steps to the next leaf boundary, then runs fused — still bitwise."""
+    _, P, m_loc, n, b = GEOMS[0]
+    comm = SimComm(P)
+    A = _matrix(P, m_loc, n, seed=11)
+    ref = caqr_factorize(A, comm, b, collect_bundles=True, use_scan=False)
+    s = initial_sweep_state(comm, A, b)
+    for _ in range(2):  # stop inside panel 0's butterfly ladder
+        s = sweep_step(comm, s)
+    assert s.cursor[1] != PHASE_LEAF
+    got = SweepOrchestrator.from_state(s, comm, fused=True).run()
+    _assert_states_bitwise((got.R, got.factors, got.bundles),
+                           (ref.R, ref.factors, ref.bundles), "resume")
+
+
+def test_fused_simcomm_matches_stepped_shard_map():
+    """Cross-backend closure of the fusion claim: the fused SimComm sweep
+    equals the UNFUSED shard_map sweep leaf-for-leaf (stepped SimComm ==
+    stepped shard_map is §8's gate; fused == stepped SimComm is gated
+    above; this pins the composition on the ragged geometry)."""
+    out = run_forced_devices("""
+        import functools
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SimComm
+        from repro.ft.online.state import (
+            finalize, initial_sweep_state, run_panel_fused)
+        from repro.launch.spmd_qr import make_lane_mesh, make_spmd_sweep_step
+
+        P, m_loc, n, b = 4, 6, 10, 4
+        rng = np.random.default_rng(3)
+        A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+        comm = SimComm(P)
+
+        fused = jax.jit(functools.partial(run_panel_fused, comm))
+        s_f = initial_sweep_state(comm, A, b)
+        while s_f.cursor is not None:
+            s_f = fused(s_f)
+
+        step = make_spmd_sweep_step(make_lane_mesh(P))
+        s_s = initial_sweep_state(comm, A, b)
+        while s_s.cursor is not None:
+            s_s = step(s_s)
+
+        for tag, a, b_ in (("state", s_f, s_s),
+                           ("final", finalize(comm, s_f),
+                            finalize(comm, s_s))):
+            al = jax.tree_util.tree_leaves(a)
+            bl = jax.tree_util.tree_leaves(b_)
+            assert len(al) == len(bl), tag
+            for x, y in zip(al, bl):
+                x, y = np.asarray(x), np.asarray(y)
+                assert x.shape == y.shape and x.dtype == y.dtype, tag
+                assert np.array_equal(x, y), tag + ": leaf mismatch"
+        print("FUSED_SPMD_OK")
+    """, n_devices=4)
+    assert "FUSED_SPMD_OK" in out

@@ -19,7 +19,10 @@ def forced_kernels():
     backend.use_kernels(None)
 
 
-def _allclose(a, b, rtol=3e-4, atol=3e-4):
+def _allclose(a, b, rtol=None, atol=None, dtype=jnp.float32):
+    trtol, tatol = ref.tolerances(dtype)
+    rtol = trtol if rtol is None else rtol
+    atol = tatol if atol is None else atol
     for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
 
@@ -71,7 +74,13 @@ def test_padding_matches_unpadded_kernel(rng):
     from repro.kernels import panel_qr as _panel
 
     direct = _panel.panel_qr(A, jnp.asarray(0, jnp.int32))
-    padded = ops.panel_qr(A, 0)
+    # the padding contract belongs to the pallas routes; the default
+    # compiled/xla engine runs at natural shapes, so force interpret here
+    backend.force_mode(backend.MODE_INTERPRET, "panel_qr")
+    try:
+        padded = ops.panel_qr(A, 0)
+    finally:
+        backend.force_mode(None, "panel_qr")
     _allclose(direct, padded, rtol=1e-5, atol=1e-5)
 
 
@@ -163,3 +172,125 @@ def test_kernels_run_without_explicit_interpret(rng):
     C = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
     out = _wy.wy_apply(Y, T, C, block_n=8)
     assert out.shape == C.shape
+
+
+# --- the per-op execution policy (DESIGN.md §10) ----------------------------
+
+
+@pytest.fixture
+def clean_policy(monkeypatch):
+    """Start from the automatic policy with no env overrides; restore it."""
+    for var in ("REPRO_NO_KERNELS", "REPRO_FORCE_KERNELS",
+                "REPRO_KERNEL_MODE"):
+        monkeypatch.delenv(var, raising=False)
+    for op in backend.OPS:
+        monkeypatch.delenv(f"REPRO_KERNEL_MODE_{op.upper()}", raising=False)
+    backend.use_kernels(None)
+    backend.force_mode(None)
+    yield monkeypatch
+    backend.use_kernels(None)
+    backend.force_mode(None)
+
+
+def test_auto_policy_is_compiled_everywhere(clean_policy):
+    for op in backend.OPS:
+        assert backend.kernel_mode(op) == backend.MODE_COMPILED
+
+
+def test_env_global_and_per_op_mode(clean_policy):
+    clean_policy.setenv("REPRO_KERNEL_MODE", "oracle")
+    assert backend.kernel_mode("panel_qr") == backend.MODE_ORACLE
+    # the per-op variable beats the global one
+    clean_policy.setenv("REPRO_KERNEL_MODE_PANEL_QR", "interpret")
+    assert backend.kernel_mode("panel_qr") == backend.MODE_INTERPRET
+    assert backend.kernel_mode("wy_apply") == backend.MODE_ORACLE
+    # 'auto' resolves back to compiled
+    clean_policy.setenv("REPRO_KERNEL_MODE", "auto")
+    assert backend.kernel_mode("wy_apply") == backend.MODE_COMPILED
+
+
+def test_env_invalid_mode_warns_and_is_ignored(clean_policy):
+    clean_policy.setenv("REPRO_KERNEL_MODE", "turbo")
+    with pytest.warns(UserWarning, match="REPRO_KERNEL_MODE"):
+        assert backend.kernel_mode("panel_qr") == backend.MODE_COMPILED
+
+
+def test_force_mode_beats_env(clean_policy):
+    clean_policy.setenv("REPRO_KERNEL_MODE", "oracle")
+    backend.force_mode(backend.MODE_INTERPRET, "stacked_qr")
+    assert backend.kernel_mode("stacked_qr") == backend.MODE_INTERPRET
+    assert backend.kernel_mode("panel_qr") == backend.MODE_ORACLE
+    backend.force_mode(None, "stacked_qr")
+    assert backend.kernel_mode("stacked_qr") == backend.MODE_ORACLE
+
+
+def test_no_kernels_env_beats_mode_env(clean_policy):
+    clean_policy.setenv("REPRO_KERNEL_MODE", "compiled")
+    clean_policy.setenv("REPRO_NO_KERNELS", "1")
+    assert backend.kernel_mode("wy_apply") == backend.MODE_ORACLE
+    assert not backend.dispatch_enabled()
+
+
+def test_use_kernels_beats_everything(clean_policy):
+    clean_policy.setenv("REPRO_NO_KERNELS", "1")
+    backend.use_kernels(True)
+    assert backend.kernel_mode("panel_qr") == backend.MODE_COMPILED
+    assert backend.dispatch_enabled()
+    backend.use_kernels(False)
+    backend.force_mode(backend.MODE_COMPILED)  # still loses to use_kernels
+    assert backend.kernel_mode("panel_qr") == backend.MODE_ORACLE
+    assert not backend.dispatch_enabled()
+
+
+def test_compiled_engine_follows_probe(clean_policy):
+    """compiled resolves to pallas iff the capability probe passes; the
+    probe result is cached per process and resettable for tests."""
+    backend.reset_probe_cache()
+    try:
+        clean_policy.setattr(backend, "_probe_compiled", lambda op: True)
+        assert backend.compiled_engine("panel_qr") == backend.ENGINE_PALLAS
+        backend.reset_probe_cache()
+        clean_policy.setattr(backend, "_probe_compiled", lambda op: False)
+        assert backend.compiled_engine("panel_qr") == backend.ENGINE_XLA
+        report = backend.probe_report()
+        assert set(report) == set(backend.OPS)
+        assert all(e["engine"] == backend.ENGINE_XLA
+                   for e in report.values())
+    finally:
+        backend.reset_probe_cache()
+
+
+def test_oracle_route_for_unsupported_dtype(clean_policy, rng):
+    """Dtypes outside the kernel envelope silently take the oracle leg even
+    in compiled mode (f64 here; the result IS the oracle's, bit for bit)."""
+    A = jnp.asarray(rng.standard_normal((16, 8)))  # f32 by default
+    A64 = jnp.asarray(np.asarray(A, np.float64))
+    if A64.dtype != jnp.float64:
+        pytest.skip("x64 disabled on this build")
+    got = ops.panel_qr(A64, 0)
+    want = ref.panel_qr(A64, 0)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_autotune_lookup_drives_dispatch(clean_policy, rng):
+    """A tuned cell's params are consulted on dispatch (and cleared cells
+    fall back to the static defaults) — numerics are unroll-invariant."""
+    from repro.kernels import autotune
+
+    A = jnp.asarray(rng.standard_normal((24, 6)), jnp.float32)
+    autotune.clear()
+    try:
+        base = ops.panel_qr(A, 0)
+        variant = autotune.current_variant("panel_qr")
+        autotune._CELLS[autotune.cell_key(
+            "panel_qr", A.shape, A.dtype, variant)] = {
+                "params": {"unroll": 4}, "us": 1.0}
+        tuned = ops.panel_qr(A, 0)
+        for g, w in zip(jax.tree_util.tree_leaves(base),
+                        jax.tree_util.tree_leaves(tuned)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=3e-6, atol=3e-6)
+    finally:
+        autotune.clear()

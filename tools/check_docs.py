@@ -34,6 +34,7 @@ REQUIRED_HEADINGS = {
         "## 7. Ragged-panel geometry and padding semantics",
         "## 8. SPMD execution model",
         "## 9. Online recovery and the sweep state machine",
+        "## 10. Kernel fast path",
     ],
 }
 

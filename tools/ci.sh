@@ -20,7 +20,13 @@
 #                        (examples/spmd_quickstart.py: shard_map FT sweep +
 #                        kill on a forced 4-device host mesh, checked
 #                        bitwise vs SimComm), the repro.ft docstring-example
-#                        doctests, then `benchmarks/run.py --quick`, which
+#                        doctests, the compiled-kernel smoke tier
+#                        (tools/kernel_smoke.py: capability probe report,
+#                        compiled-dispatch parity vs the jnp oracles, and an
+#                        autotune cache round-trip — loud skip when no op
+#                        lowers native Pallas, an error under
+#                        CI_REQUIRE_COMPILED_KERNELS=1), then
+#                        `benchmarks/run.py --quick`, which
 #                        also refreshes BENCH_core.json (incl. the `spmd`
 #                        SimComm-vs-shard_map section)
 #   tools/ci.sh --slow   additionally run the slow-marked tests
@@ -65,6 +71,10 @@ python examples/spmd_quickstart.py
 echo "== repro.ft API doctest examples =="
 python -m doctest src/repro/ft/driver.py src/repro/ft/failures.py \
     src/repro/ft/semantics.py && echo "doctests OK"
+
+echo "== compiled-kernel smoke (probe report + dispatch parity + autotune =="
+echo "== cache round-trip; CI_REQUIRE_COMPILED_KERNELS=1 to demand Pallas) =="
+python tools/kernel_smoke.py
 
 echo "== benchmark smoke (writes BENCH_core.json; fails loudly if the =="
 echo "== online stepped overhead regresses >25% over the recorded baseline =="
