@@ -114,11 +114,31 @@ def main() -> None:
           f"(poll {det['us_poll_avg']:.0f}us/boundary, "
           f"{det['fetches']} fetches)")
 
+    from benchmarks import bench_elastic
+
+    elastic = bench_elastic.suite(quick=args.quick)
+    sh, sp = elastic["shrink"], elastic["speculation"]
+    print()
+    print("# elastic path: SHRINK continuation vs REBUILD, straggler race")
+    print(f"# P={sh['config']['P']} m_loc={sh['config']['m_loc']} "
+          f"n={sh['config']['n']} b={sh['config']['b']}: "
+          f"REBUILD {sh['us_rebuild_mid_kill']:.0f}us, "
+          f"SHRINK {sh['us_shrink_mid_kill']:.0f}us "
+          f"({sh['shrink_vs_rebuild']:.2f}x); "
+          f"P-1 world {sh['p_minus_1_vs_free']:.2f}x vs failure-free")
+    print(f"# speculation: {sp['speculations']} races, "
+          f"{sp['us_per_speculation']:.0f}us each, "
+          f"{sp['speculative_vs_blocking']:.2f}x vs blocking "
+          f"(straggler excess {sp['config']['excess_us_per_boundary']:.0f}"
+          f"us/boundary)")
+
     # gate BEFORE recording: a regressed measurement must not become the
     # next run's baseline (the gate would otherwise fail exactly once),
     # and a passing one is recorded with the damped-baseline floor so a
     # lucky-fast outlier cannot set a bar ordinary runs miss by noise
     ok, msg = bench_online.check_regression(online, baseline.get("online"))
+    elastic_ok, elastic_msg = bench_elastic.check_regression(
+        elastic, baseline.get("elastic"))
     # kernels-beat-oracle gate: intra-run (compiled rows vs their oracles),
     # no baseline needed — but the verdict is recorded alongside the rows
     kernel_ok, kernel_msg = bench_core.check_kernel_regression(rows)
@@ -127,16 +147,22 @@ def main() -> None:
               "sweep_cost": sweep, "recovery": recovery,
               "general_shapes": general, "spmd": spmd,
               "online": bench_online.baseline_to_record(
-                  online, baseline.get("online"))}
+                  online, baseline.get("online")),
+              "elastic": bench_elastic.baseline_to_record(
+                  elastic, baseline.get("elastic"))}
     if not ok:
         record["online"] = baseline.get("online")   # keep the old baseline
         record["online_rejected"] = online          # the failing numbers
+    if not elastic_ok:
+        record["elastic"] = baseline.get("elastic")
+        record["elastic_rejected"] = elastic
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")
     print(f"# online regression gate: {msg}")
+    print(f"# elastic regression gate: {elastic_msg}")
     print(f"# kernel gate: {kernel_msg}")
-    if not ok or not kernel_ok:
+    if not ok or not kernel_ok or not elastic_ok:
         raise SystemExit(2)
 
     if not args.quick:

@@ -31,7 +31,10 @@ ap.add_argument("--steps", type=int, default=40)
 args = ap.parse_args()
 
 # === 1. FT-CAQR sweep: lanes die mid-factorization, REBUILD finishes =======
-P, m_loc, n, b = 4, 16, 64, 8
+# b=4 / m_loc=8 tiles are the CPU-XLA bitwise-stable envelope (same
+# geometry as examples/online_recovery.py), so the bit-identity below is
+# asserted, not just printed
+P, m_loc, n, b = 4, 8, 32, 4
 rng = np.random.default_rng(0)
 A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
 comm = SimComm(P)
@@ -56,6 +59,7 @@ identical = all(
     )
 )
 print(f"R + factors + bundles bit-identical to failure-free sweep: {identical}")
+assert identical, "REBUILD must be bit-identical to the failure-free sweep"
 
 # === 2. training under REBUILD =============================================
 cfg = get_smoke("tinyllama-1.1b")

@@ -164,3 +164,11 @@ class SimComm:
         return into.at[self._lane_index(dst, lane_axis)].set(
             x[self._lane_index(src, lane_axis)]
         )
+
+    def lane_slice(self, x, lane: int, lane_axis: int = 0):
+        """Host-side extraction of one lane's slice of a batched array.
+        Simulator-only (the SPMD path has no global view inside the
+        program): the orchestrator's speculative straggler recompute uses
+        it to bitwise-compare a rebuilt lane slice against the original
+        (``repro.ft.stragglers``)."""
+        return x[self._lane_index(lane, lane_axis)]

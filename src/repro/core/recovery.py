@@ -252,6 +252,25 @@ def rebuild_block_row_through_panel(
     return jnp.concatenate([rows[:, :col0], window], axis=1)
 
 
+def xor_buddy(lane: int, level: int) -> int:
+    """The XOR butterfly partner of ``lane`` at ``level`` — the single
+    source every per-level artifact can be refetched from, and the
+    designated adopter (level 0) when a SHRINK world re-owns a dead
+    lane's rows (``repro.ft.elastic``)."""
+    return lane ^ (1 << level)
+
+
+def pairing_table(P: int):
+    """The full ladder pairing of a ``P``-lane world: one ppermute
+    permutation per butterfly level. An elastic transition never remaps
+    pairs explicitly — it re-enters this table at the new world size, so
+    the P−1-lane (padded-pow2) world's ladder is just ``pairing_table``
+    of the new slot count. DESIGN.md §11 sketches why that is sufficient:
+    the pairing is a pure function of (slot count, level), carrying no
+    state from the old world."""
+    return [_xor_perm(P, s) for s in range(_levels(P))]
+
+
 def tsqr_recover_r(factors: DistTSQRFactors, failed: int, source: int) -> jax.Array:
     """FT-TSQR recovery (§III-B): the restarted lane obtains R from any
     single member of its redundancy group — R is bit-identical there."""

@@ -5,6 +5,19 @@ host orchestrator). All Comm-generic — the SPMD entrypoints that run them
 under shard_map live in ``repro.launch.spmd_qr``."""
 from repro.ft import driver, elastic, failures, semantics, stragglers
 from repro.ft.driver import FTSweepDriver, FTSweepResult, RecoveryEvent, ft_caqr_sweep
+from repro.ft.elastic import (
+    ElasticController,
+    ElasticSweepResult,
+    LaneWorld,
+    TransitionEvent,
+    ft_caqr_sweep_elastic,
+)
+from repro.ft.stragglers import (
+    SpeculationEvent,
+    StragglerConfig,
+    StragglerMonitor,
+    StragglerPolicy,
+)
 from repro.ft.failures import (
     FailureSchedule,
     UnrecoverableFailure,
@@ -29,4 +42,8 @@ __all__ = [
     "next_sweep_point", "prev_sweep_point", "sweep_point",
     "SweepOrchestrator", "ft_caqr_sweep_online",
     "SweepState", "initial_sweep_state", "sweep_step",
+    "ElasticController", "ElasticSweepResult", "LaneWorld",
+    "TransitionEvent", "ft_caqr_sweep_elastic",
+    "SpeculationEvent", "StragglerConfig", "StragglerMonitor",
+    "StragglerPolicy",
 ]

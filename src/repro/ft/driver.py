@@ -89,6 +89,7 @@ from repro.core.comm import SimComm
 from repro.core.householder import apply_qt
 from repro.core.trailing import RecoveryBundle
 from repro.core.tsqr import _levels
+from repro.ft.semantics import Semantics
 from repro.ft.failures import (
     Detector,
     FailureSchedule,
@@ -485,6 +486,7 @@ def ft_caqr_sweep(
     comm,
     panel_width: int,
     schedule: Optional[FailureSchedule] = None,
+    semantics: Optional["Semantics"] = None,
 ) -> FTSweepResult:
     """Run the full windowed FT-CAQR sweep under a failure schedule
     (paper §II-III end to end).
@@ -493,6 +495,11 @@ def ft_caqr_sweep(
     ``caqr_factorize(A0, comm, panel_width, collect_bundles=True,
     use_scan=False)`` regardless of the schedule (the paper's recovery
     guarantee), with one ``RecoveryEvent`` per REBUILD.
+
+    ``semantics`` selects the FT-MPI continuation policy: REBUILD
+    (default) runs this driver; SHRINK/BLANK delegate to the scheduled
+    elastic driver (``repro.ft.elastic.ft_caqr_sweep_elastic``), which
+    returns an ``ElasticSweepResult`` with a host-spliced R instead.
 
     ``comm`` selects the execution: ``SimComm(P)`` for the single-device
     simulator, ``AxisComm(axis)`` inside ``shard_map`` for the production
@@ -519,4 +526,9 @@ def ft_caqr_sweep(
     >>> [(e.point, e.lane) for e in out.events]
     [((0, 'trailing', 0), 1)]
     """
+    if semantics is not None and semantics is not Semantics.REBUILD:
+        from repro.ft.elastic import ft_caqr_sweep_elastic
+
+        return ft_caqr_sweep_elastic(
+            A0, comm, panel_width, schedule=schedule, semantics=semantics)
     return FTSweepDriver(A0, comm, panel_width, schedule).run()

@@ -121,6 +121,13 @@ class NaNSentinelDetector:
     def revive(self, lane: int) -> None:
         self._reported.discard(lane)
 
+    def reset(self) -> None:
+        """Re-arm every sentinel. The elastic orchestrator calls this
+        after a world transition: lane numbering changed, so per-lane
+        report state from the old world is meaningless (the probe itself
+        is shape-agnostic and works on the new layout unchanged)."""
+        self._reported.clear()
+
 
 class FailStopDetector:
     """Injectable fail-stop oracle for tests: the harness declares deaths,

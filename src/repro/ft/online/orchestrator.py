@@ -45,9 +45,17 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.comm import SimComm
-from repro.ft.driver import FTSweepResult, RecoveryEvent, recover_lanes
+from repro.ft.driver import (
+    FTSweepResult,
+    RecoveryEvent,
+    obliterate_state,
+    recover_lanes,
+    rebuild_state,
+)
+from repro.ft.elastic import ElasticController, ElasticSweepResult
 from repro.ft.failures import PHASE_LEAF, LaneFailure, prev_sweep_point
 from repro.ft.online.detect import NaNSentinelDetector, OnlineDetector
 from repro.ft.online.state import (
@@ -56,8 +64,14 @@ from repro.ft.online.state import (
     initial_sweep_state,
     run_panel_fused,
     run_steps,
+    state_lane_axes,
 )
 from repro.ft.semantics import Semantics
+from repro.ft.stragglers import (
+    SpeculationEvent,
+    StragglerMonitor,
+    StragglerPolicy,
+)
 
 # One jitted segment runner per (comm, segment size); jax's own cache then
 # specializes per state treedef (= per cursor), so every orchestrator over
@@ -110,9 +124,35 @@ class SweepOrchestrator:
     semantics:
         FT-MPI continuation policy on detection (``repro.ft.semantics``).
         REBUILD (default) is the paper's recovery; ABORT re-raises the
-        death as ``LaneFailure``; SHRINK/BLANK are not meaningful for an
-        in-flight factorization (every lane owns irreplaceable rows) and
-        raise ``NotImplementedError``.
+        death as ``LaneFailure``; SHRINK/BLANK continue elastically
+        (``repro.ft.elastic``): the death is healed from its XOR buddies
+        like a REBUILD, then at the next panel boundary the world
+        re-meshes (survivor adopts the rows / hole stays masked) and the
+        sweep resumes as a new epoch. Elastic runs return
+        ``ElasticSweepResult`` (host-spliced R) instead of
+        ``FTSweepResult``.
+    elastic_policy:
+        Slot policy of a shrunken world: ``"pad"`` (default — ceil-pow2
+        slots with zero-row ghosts) or ``"fold"`` (floor-pow2, rows
+        re-split; the SPMD re-mesh uses this so the new mesh fits on
+        surviving devices).
+    step_factory:
+        Required with ``step_fn`` + elastic semantics: called as
+        ``step_factory(n_slots)`` after a transition to build the new
+        world's segment runner
+        (``repro.launch.spmd_qr.make_spmd_step_factory``).
+    grow_at:
+        Optional sweep point; when it completes, a returning lane re-joins
+        at the next panel boundary (``ElasticController.request_grow``).
+    straggler_monitor, lane_clock:
+        Wire a ``repro.ft.stragglers.StragglerMonitor`` into the segment
+        loop: ``lane_clock(comm, state)`` returns per-lane times for the
+        just-run segment (tests simulate; a pod reports real step times).
+        Policy SPECULATE races a buddy recompute of a flagged lane's
+        sweep point against the straggler (first result wins,
+        bitwise-checked, logged as ``SpeculationEvent`` in
+        ``self.speculations``); EVICT (or ``escalate_after`` exhausted)
+        poisons the lane and escalates to a SHRINK transition.
     """
 
     def __init__(
@@ -131,6 +171,11 @@ class SweepOrchestrator:
         persist_every: Optional[int] = None,
         semantics: Semantics = Semantics.REBUILD,
         state: Optional[SweepState] = None,
+        elastic_policy: str = "pad",
+        step_factory: Optional[Callable[[int], Callable]] = None,
+        grow_at=None,
+        straggler_monitor: Optional[StragglerMonitor] = None,
+        lane_clock: Optional[Callable] = None,
     ):
         assert comm is not None, "comm is required"
         self.comm = comm
@@ -159,6 +204,17 @@ class SweepOrchestrator:
             persist_every = 1  # a store with no cadence means every boundary
         self.persist_every = persist_every
         self.semantics = semantics
+        self.elastic_policy = elastic_policy
+        self.step_factory = step_factory
+        self.grow_at = grow_at
+        self.elastic: Optional[ElasticController] = None
+        if semantics in (Semantics.SHRINK, Semantics.BLANK):
+            self.elastic = ElasticController(
+                semantics, self.state.geom, policy=elastic_policy)
+        self.straggler_monitor = straggler_monitor
+        self.lane_clock = lane_clock
+        self.speculations: List[SpeculationEvent] = []
+        self._spec_counts: Dict[int, int] = {}
         self.events: List[RecoveryEvent] = []
         # run statistics (benchmarks read these)
         self.segments_run = 0
@@ -219,11 +275,16 @@ class SweepOrchestrator:
     def run(self) -> FTSweepResult:
         """Drive the sweep to completion; returns the same ``FTSweepResult``
         as ``ft_caqr_sweep`` (bit-identical to the failure-free sweep no
-        matter what the detector found, or ``UnrecoverableFailure``)."""
-        geom = self.state.geom
-        levels = geom.levels
+        matter what the detector found, or ``UnrecoverableFailure``).
+        Under SHRINK/BLANK semantics returns ``ElasticSweepResult``
+        instead — epochs at different world sizes have no common lane
+        layout for factors, so R is host-spliced."""
         boundary = 0
         while True:
+            # re-read per iteration: an elastic transition swaps in a new
+            # epoch's geometry (and comm) mid-run
+            geom = self.state.geom
+            levels = geom.levels
             if self.state.cursor is not None:
                 self.state = self._segment(self.state)
                 self.segments_run += 1
@@ -238,15 +299,122 @@ class SweepOrchestrator:
             self.poll_s += time.perf_counter() - t0
             if newly:
                 self._recover(newly, point)
+            if (self.straggler_monitor is not None
+                    and self.lane_clock is not None
+                    and self.state.cursor is not None):
+                self._check_stragglers(point)
+            if self.elastic is not None and point == self.grow_at:
+                self.elastic.request_grow()
+            self._maybe_transition()
             if self.store is not None and self.persist_every and (
                     boundary % self.persist_every == 0
                     or self.state.cursor is None):
                 self.store.push(self.state)
-            if self.state.cursor is None:
+            if self.state.cursor is None and (
+                    self.elastic is None or not self.elastic.pending):
                 break
+        if self.elastic is not None:
+            return self.elastic.finish(self.comm, self.state, self.events)
         R, factors, bundles = finalize(self.comm, self.state)
         return FTSweepResult(R=R, factors=factors, bundles=bundles,
                              events=self.events)
+
+    # -- elastic transitions -----------------------------------------------
+
+    def _maybe_transition(self) -> None:
+        """Apply a pending SHRINK/BLANK/grow at a panel boundary: the
+        controller deposits + harvests + re-owns, and the orchestrator
+        swaps in the new world's comm, segment runner, and detector
+        arming."""
+        while self.elastic is not None and \
+                self.elastic.ready(self.state.cursor):
+            new_comm, new_state = self.elastic.transition(
+                self.comm, self.state)
+            self.state = new_state
+            if new_comm is None:
+                # the closing epoch already finished the factorization;
+                # keep draining — leftover requests are bookkeeping only
+                continue
+            break
+        else:
+            return
+        self.comm = new_comm
+        if self.step_fn is not None:
+            assert self.step_factory is not None, (
+                "an elastic transition under step_fn= needs step_factory= "
+                "to re-mesh the segment runner over the shrunken lane axis "
+                "(repro.launch.spmd_qr.make_spmd_step_factory)")
+            self.step_fn = self.step_factory(new_comm.axis_size())
+        reset = getattr(self.detector, "reset", None)
+        if reset is not None:
+            reset()  # re-arm sentinels for the new world's lane numbering
+        if self.straggler_monitor is not None:
+            # lane ids re-number across a transition: stale EWMAs would
+            # mis-attribute slowness in the new world
+            self.straggler_monitor.ewma.clear()
+            for k in self.straggler_monitor.flags:
+                self.straggler_monitor.flags[k] = 0
+
+    # -- stragglers --------------------------------------------------------
+
+    def _check_stragglers(self, point) -> None:
+        times = self.lane_clock(self.comm, self.state)
+        flagged = self.straggler_monitor.report(times)
+        cfg = self.straggler_monitor.cfg
+        # clocks may keep reporting lanes of a pre-transition world (or
+        # ghost slots): only live current-world lanes can be acted on
+        flagged = [
+            l for l in flagged
+            if l < self.comm.axis_size() and (
+                self.elastic is None or self.elastic.world.live[l])]
+        for lane in flagged:
+            if cfg.policy is StragglerPolicy.SPECULATE:
+                self._speculate(lane, point)
+                self.straggler_monitor.flags[lane] = 0
+                n = self._spec_counts.get(lane, 0) + 1
+                self._spec_counts[lane] = n
+                if cfg.escalate_after is not None and n >= cfg.escalate_after:
+                    self._evict(lane, point)
+            elif cfg.policy is StragglerPolicy.EVICT:
+                self._evict(lane, point)
+            # REBALANCE/IGNORE have no mid-sweep action: row ownership is
+            # fixed by the factorization, only the batch pipeline rebalances
+
+    def _speculate(self, lane: int, point) -> None:
+        """Speculative buddy recompute of a straggler's sweep point: run
+        the proven REBUILD arithmetic for ``lane`` on a copy (sourcing
+        from its XOR buddies), bitwise-compare the lane's slice, and let
+        the first finished result win — the sweep never blocks on the
+        slow lane. A mismatch means the lane was corrupt, not slow; the
+        rebuilt copy is authoritative either way."""
+        struck = obliterate_state(self.comm, self.state, lane)
+        spec, reads = rebuild_state(self.comm, struck, lane, point, {lane})
+        axes = state_lane_axes(self.state)
+        flat_own = jax.tree_util.tree_leaves(self.state)
+        flat_spec = jax.tree_util.tree_leaves(spec)
+        flat_ax = jax.tree_util.tree_leaves(axes)
+        matched = all(
+            np.array_equal(
+                np.asarray(self.comm.lane_slice(a, lane, ax)),
+                np.asarray(self.comm.lane_slice(b, lane, ax)))
+            for a, b, ax in zip(flat_own, flat_spec, flat_ax))
+        self.state = spec  # first result wins (bitwise-equal when matched)
+        self.speculations.append(SpeculationEvent(
+            point=tuple(point), lane=lane, matched=matched, reads=reads))
+
+    def _evict(self, lane: int, point) -> None:
+        """Persistent straggler: treat it as failed. Poison it, heal from
+        its buddies, and hand it to the elastic controller as a SHRINK
+        death — the world re-meshes without it at the next boundary."""
+        if self.elastic is None:
+            self.elastic = ElasticController(
+                Semantics.SHRINK, self.state.geom, policy=self.elastic_policy)
+        self.state = obliterate_state(self.comm, self.state, lane)
+        self._heal([lane], point)
+        self.elastic.note_deaths([lane])
+        self.straggler_monitor.ewma.pop(lane, None)
+        self.straggler_monitor.flags[lane] = 0
+        self._spec_counts.pop(lane, None)
 
     # -- recovery ----------------------------------------------------------
 
@@ -254,11 +422,15 @@ class SweepOrchestrator:
         assert point is not None, "death detected before any sweep point ran"
         if self.semantics is Semantics.ABORT:
             raise LaneFailure(newly[0], point)
-        if self.semantics is not Semantics.REBUILD:
-            raise NotImplementedError(
-                f"{self.semantics} is not meaningful mid-factorization: "
-                "every lane owns irreplaceable rows of A (use REBUILD)"
-            )
+        # SHRINK/BLANK heal exactly like REBUILD (the adopter "hosts" the
+        # dead slot until the panel boundary), then note the death for the
+        # boundary transition
+        self._heal(newly, point)
+        if self.elastic is not None and self.semantics in (
+                Semantics.SHRINK, Semantics.BLANK):
+            self.elastic.note_deaths(newly)
+
+    def _heal(self, newly: List[int], point) -> None:
         dead = set(newly)
 
         def on_recovered(lane: int) -> None:

@@ -308,6 +308,27 @@ def finalize(comm, state: SweepState):
     return R, factors, bundles
 
 
+def deposit_boundary(comm, state: SweepState):
+    """Flush the pending deposit at a panel boundary and return
+    ``(state, r)`` where ``r`` is the number of fully deposited panels —
+    the consumed-column frontier sits at ``r * geom.b``.
+
+    Legal only at a boundary: cursor at a leaf point ``(k, leaf, 0)``
+    (deposits the deferred panel ``k-1``) or past-the-end ``None``
+    (deposits the last panel; do NOT also call :func:`finalize`, which
+    would re-run the same deposit). The elastic transitions
+    (``repro.ft.elastic``) harvest the trailing submatrix at exactly
+    this frontier."""
+    if state.cursor is None:
+        state = _deposit_panel(comm, state, state.geom.n_panels - 1)
+        return state, state.geom.n_panels
+    k, phase, _ = state.cursor
+    assert phase == PHASE_LEAF, f"not at a panel boundary: {state.cursor}"
+    if k > 0:
+        state = _deposit_panel(comm, state, k - 1)
+    return state, k
+
+
 def run_steps(comm, state: SweepState, max_points: Optional[int] = None
               ) -> SweepState:
     """Iterate ``sweep_step`` up to ``max_points`` times (or to completion).

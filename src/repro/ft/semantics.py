@@ -11,9 +11,15 @@ slice plus one surviving buddy per artifact.
 The online orchestrator (``repro.ft.online.orchestrator``) takes the policy
 as its ``semantics`` argument and applies it to *runtime-detected* deaths:
 REBUILD recovers in-flight, ABORT re-raises the detection as
-``LaneFailure``; SHRINK and BLANK are refused mid-factorization — every
-lane owns irreplaceable rows of A, so a smaller/holed world cannot finish
-the same problem (they remain training-loop policies).
+``LaneFailure``, and SHRINK/BLANK continue *elastically*
+(``repro.ft.elastic``): the dead lane's rows are first healed from its XOR
+buddy with the REBUILD arithmetic, then at the next panel boundary a
+survivor adopts them (SHRINK — survivors renumber into a smaller world) or
+the hole stays as a masked no-op lane (BLANK), and the sweep resumes as a
+new epoch on the re-owned trailing submatrix. The scheduled driver
+(``repro.ft.driver.ft_caqr_sweep``) accepts the same policy and delegates
+SHRINK/BLANK to the scheduled elastic driver, the differential oracle of
+the online path.
 
 >>> Semantics.REBUILD.value
 'rebuild'

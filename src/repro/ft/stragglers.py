@@ -9,6 +9,13 @@ keeps an EWMA of per-lane step-report times; lanes persistently slower than
     pipeline's per-lane row assignment.
   * EVICT     — treat a persistent straggler as failed: hand it to the
     fault-tolerance supervisor (SHRINK/REBUILD semantics do the rest).
+  * SPECULATE — mid-sweep only (the orchestrator's segment loop): rather
+    than blocking the boundary on the slow lane, recompute its sweep
+    point speculatively from its XOR buddy with the proven REBUILD
+    arithmetic, bitwise-check the two results, and let the first one win.
+    A ``SpeculationEvent`` records each race; ``escalate_after`` races on
+    the same lane escalates to EVICT (which under the elastic
+    orchestrator becomes a SHRINK transition — ``repro.ft.elastic``).
 
 On this single-host container lane timings are simulated by tests; the
 policy logic is exactly what a pod deployment runs on real step reports.
@@ -17,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional
+from typing import Dict, List, NamedTuple, Optional
 
 import numpy as np
 
@@ -26,6 +33,20 @@ class StragglerPolicy(enum.Enum):
     REBALANCE = "rebalance"
     EVICT = "evict"
     IGNORE = "ignore"
+    SPECULATE = "speculate"
+
+
+class SpeculationEvent(NamedTuple):
+    """One speculative buddy recompute of a straggler's sweep point:
+    where it ran, which lane raced, whether the speculative result
+    bitwise-matched the straggler's own (it must, when the lane is merely
+    slow — a mismatch means corruption and the rebuilt copy wins), and
+    the buddy reads the recompute cost."""
+
+    point: tuple
+    lane: int
+    matched: bool
+    reads: Dict[str, int]
 
 
 @dataclasses.dataclass
@@ -35,6 +56,7 @@ class StragglerConfig:
     ewma: float = 0.5
     min_share: float = 0.25      # floor on a rebalanced lane's share
     policy: StragglerPolicy = StragglerPolicy.REBALANCE
+    escalate_after: Optional[int] = None  # SPECULATE races before EVICT
 
 
 class StragglerMonitor:

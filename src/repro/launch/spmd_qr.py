@@ -193,6 +193,64 @@ def make_spmd_sweep_step(mesh=None, axis_name: str = "qr"):
     return step
 
 
+def make_spmd_step_factory(axis_name: str = "qr", devices=None):
+    """Per-world segment-runner factory for the *elastic* orchestrator.
+
+    An elastic transition (``repro.ft.elastic``) changes the lane count
+    mid-run; the orchestrator then calls ``factory(n_slots)`` and gets a
+    fresh ``make_spmd_sweep_step`` over a new 1-D mesh of the first
+    ``n_slots`` surviving devices — ``shard_map`` re-meshed over the
+    shrunken lane axis. Pair it with ``elastic_policy="fold"`` so the new
+    slot count is a power of two no larger than the survivor count (a
+    SHRINK world must fit on the devices that are left)."""
+    devices = list(devices) if devices is not None else list(jax.devices())
+
+    def factory(n_slots: int):
+        assert n_slots <= len(devices), (n_slots, len(devices))
+        mesh = compat.make_mesh((n_slots,), (axis_name,),
+                                devices=devices[:n_slots])
+        return make_spmd_sweep_step(mesh, axis_name)
+
+    return factory
+
+
+def ft_caqr_sweep_elastic_spmd(
+    A: jax.Array,
+    panel_width: int,
+    detector=None,
+    mesh=None,
+    axis_name: str = "qr",
+    semantics=None,
+    **orchestrator_kw,
+):
+    """Elastic online sweep on the SPMD path: like
+    ``ft_caqr_sweep_online_spmd`` but with SHRINK/BLANK semantics — a
+    detected death is healed from its buddy and the sweep re-meshes over
+    the shrunken lane axis at the next panel boundary (fold policy:
+    floor-pow2 of the survivor count, so the new mesh fits on surviving
+    devices). Returns ``repro.ft.elastic.ElasticSweepResult``."""
+    from repro.ft.online.orchestrator import SweepOrchestrator
+    from repro.ft.semantics import Semantics
+
+    if mesh is None:
+        mesh = make_lane_mesh(axis_name=axis_name)
+    n_lanes = mesh.shape[axis_name]
+    m, n = A.shape
+    assert m % n_lanes == 0, (
+        f"rows ({m}) must block-shard evenly over {n_lanes} lanes"
+    )
+    orch = SweepOrchestrator(
+        A.reshape(n_lanes, m // n_lanes, n), SimComm(n_lanes), panel_width,
+        detector=detector,
+        step_fn=make_spmd_sweep_step(mesh, axis_name),
+        step_factory=make_spmd_step_factory(axis_name),
+        semantics=semantics if semantics is not None else Semantics.SHRINK,
+        elastic_policy="fold",
+        **orchestrator_kw,
+    )
+    return orch.run()
+
+
 def ft_caqr_sweep_online_spmd(
     A: jax.Array,
     panel_width: int,

@@ -1,0 +1,165 @@
+"""Big-P CI tier: the SPMD kill matrix at P=16 and P=32 (ISSUE 7 satellite).
+
+The P=4 differential gate (``tests/test_spmd_ft_driver.py``) exercises two
+butterfly levels; lane counts of 16 and 32 add levels 2-4, where the XOR
+pairing, the REBUILD single-source fetches, and the elastic pairing remap
+all take paths a 4-lane world never reaches. Each test runs one subprocess
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
+``tests/spmd_subprocess_util.py``) covering its whole matrix — jax startup
+dominates, so cells share the interpreter.
+
+P=16 is the tier-1 spot check (a handful of kill points, one per phase,
+plus one elastic SHRINK continuation on the folded 16->8 mesh). P=32 is
+the fuller matrix and carries the ``slow`` marker (``tools/ci.sh --slow``).
+"""
+import pytest
+
+from spmd_subprocess_util import run_forced_devices
+
+
+def test_spmd_kill_matrix_p16():
+    """Spot kills at P=16, one per phase including a deep butterfly level:
+    scheduled shard_map bitwise-equal to SimComm; a runtime-detected kill
+    under the elastic orchestrator finishes on the folded 8-lane mesh with
+    R matching the failure-free reference within ``ref.tolerances``."""
+    out = run_forced_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SimComm
+        from repro.ft import FailureSchedule, ft_caqr_sweep, sweep_point
+        from repro.ft.online.detect import ScriptedKiller
+        from repro.kernels.ref import tolerances
+        from repro.launch.spmd_qr import (
+            ft_caqr_sweep_elastic_spmd, ft_caqr_sweep_spmd, make_lane_mesh)
+
+        P_, m_loc, n, b = 16, 4, 16, 4
+        mesh = make_lane_mesh(P_)
+        rng = np.random.default_rng(7)
+        A = jnp.asarray(rng.standard_normal((P_ * m_loc, n)), jnp.float32)
+
+        def compare(tag, sched):
+            got = ft_caqr_sweep_spmd(A, b, schedule=sched, mesh=mesh)
+            sim = ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b,
+                                schedule=sched)
+            gl = jax.tree_util.tree_leaves((got.R, got.factors, got.bundles))
+            sl = jax.tree_util.tree_leaves((sim.R, sim.factors, sim.bundles))
+            assert len(gl) == len(sl)
+            for g, s in zip(gl, sl):
+                assert np.array_equal(np.asarray(g), np.asarray(s)), tag
+            assert ([(e.point, e.lane, e.reads) for e in got.events]
+                    == [(e.point, e.lane, e.reads) for e in sim.events]), tag
+            print("OK", tag)
+
+        # spot matrix: failure-free + one kill per phase, lanes spread
+        # across the butterfly (level 3 pairs lane 9 with lane 1)
+        for tag, sched in [
+            ("p16-free", None),
+            ("p16-leaf", FailureSchedule(
+                events={sweep_point(0, "leaf"): [9]})),
+            ("p16-tsqr-deep", FailureSchedule(
+                events={sweep_point(1, "tsqr", 3): [14]})),
+            ("p16-trail", FailureSchedule(
+                events={sweep_point(2, "trailing", 1): [7]})),
+        ]:
+            compare(tag, sched)
+
+        # elastic SHRINK on the SPMD path: runtime kill, fold 16 -> 8
+        ref = ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b)
+        pt = sweep_point(1, "trailing", 0)
+        res = ft_caqr_sweep_elastic_spmd(
+            A, b, mesh=mesh, fault_hooks=[ScriptedKiller({pt: [11]})])
+        # fold policy re-splits the 15 survivors' rows evenly over a
+        # compact all-live floor-pow2 world
+        assert res.world.n_slots == 8 and res.world.n_live == 8, res.world
+        assert [t.kind for t in res.transitions] == ["shrink"]
+        assert res.transitions[0].world_before.n_live == P_
+
+        def signfix(R):
+            s = np.sign(np.diag(np.asarray(R)))
+            return np.asarray(R) * np.where(s == 0, 1.0, s)[:, None]
+
+        rtol, atol = tolerances(jnp.float32)
+        np.testing.assert_allclose(signfix(res.R), signfix(ref.R[0]),
+                                   rtol=rtol, atol=atol)
+        print("P16_OK")
+    """, n_devices=16)
+    assert "P16_OK" in out
+
+
+@pytest.mark.slow
+def test_spmd_kill_matrix_p32():
+    """The fuller P=32 matrix: kills at every phase across panels and
+    butterfly levels (including level 4, which only exists at P=32),
+    a repeat-death schedule, a buddy-pair refusal, and an elastic SHRINK
+    continuation on the folded 16-lane mesh."""
+    out = run_forced_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SimComm
+        from repro.ft import (FailureSchedule, UnrecoverableFailure,
+                              ft_caqr_sweep, sweep_point)
+        from repro.ft.online.detect import ScriptedKiller
+        from repro.kernels.ref import tolerances
+        from repro.launch.spmd_qr import (
+            ft_caqr_sweep_elastic_spmd, ft_caqr_sweep_spmd, make_lane_mesh)
+
+        P_, m_loc, n, b = 32, 4, 24, 4
+        mesh = make_lane_mesh(P_)
+        rng = np.random.default_rng(11)
+        A = jnp.asarray(rng.standard_normal((P_ * m_loc, n)), jnp.float32)
+
+        def compare(tag, sched):
+            got = ft_caqr_sweep_spmd(A, b, schedule=sched, mesh=mesh)
+            sim = ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b,
+                                schedule=sched)
+            gl = jax.tree_util.tree_leaves((got.R, got.factors, got.bundles))
+            sl = jax.tree_util.tree_leaves((sim.R, sim.factors, sim.bundles))
+            for g, s in zip(gl, sl):
+                assert np.array_equal(np.asarray(g), np.asarray(s)), tag
+            assert ([(e.point, e.lane, e.reads) for e in got.events]
+                    == [(e.point, e.lane, e.reads) for e in sim.events]), tag
+            print("OK", tag)
+
+        cells = [("p32-free", None)]
+        for k, phase, lvl, lane in [
+            (0, "leaf", None, 17),
+            (0, "tsqr", 0, 30),
+            (1, "tsqr", 2, 5),
+            (2, "tsqr", 4, 21),      # the P=32-only butterfly level
+            (3, "trailing", 0, 12),
+            (5, "trailing", 1, 31),
+        ]:
+            pt = (sweep_point(k, phase) if lvl is None
+                  else sweep_point(k, phase, lvl))
+            cells.append((f"p32-{k}-{phase}-{lvl}-{lane}",
+                          FailureSchedule(events={pt: [lane]})))
+        cells.append(("p32-repeat", FailureSchedule(events={
+            sweep_point(1, "trailing", 0): [6],
+            sweep_point(4, "trailing", 1): [6],
+        })))
+        for tag, sched in cells:
+            compare(tag, sched)
+
+        # buddy-pair death refuses at trace time, same as the simulator
+        try:
+            ft_caqr_sweep_spmd(A, b, mesh=mesh, schedule=FailureSchedule(
+                events={sweep_point(2, "trailing", 0): [8, 9]}))
+            raise AssertionError("buddy-pair death must refuse")
+        except UnrecoverableFailure:
+            print("OK p32-unrecoverable")
+
+        # elastic SHRINK continuation: fold 32 -> 16 mid-sweep
+        ref = ft_caqr_sweep(A.reshape(P_, m_loc, n), SimComm(P_), b)
+        pt = sweep_point(2, "trailing", 0)
+        res = ft_caqr_sweep_elastic_spmd(
+            A, b, mesh=mesh, fault_hooks=[ScriptedKiller({pt: [19]})])
+        assert res.world.n_slots == 16 and res.world.n_live == 16
+
+        def signfix(R):
+            s = np.sign(np.diag(np.asarray(R)))
+            return np.asarray(R) * np.where(s == 0, 1.0, s)[:, None]
+
+        rtol, atol = tolerances(jnp.float32)
+        np.testing.assert_allclose(signfix(res.R), signfix(ref.R[0]),
+                                   rtol=rtol, atol=atol)
+        print("P32_OK")
+    """, n_devices=32)
+    assert "P32_OK" in out

@@ -28,6 +28,7 @@ REQUIRED_HEADINGS = {
     "README.md": [
         "## Shape support",
         "## Execution model: one program, two paths",
+        "### Semantics support",
     ],
     "DESIGN.md": [
         "## 5. Recovery data-flow",
@@ -35,6 +36,7 @@ REQUIRED_HEADINGS = {
         "## 8. SPMD execution model",
         "## 9. Online recovery and the sweep state machine",
         "## 10. Kernel fast path",
+        "## 11. Elastic execution",
     ],
 }
 

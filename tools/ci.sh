@@ -7,7 +7,8 @@
 #   slow       `-m slow`: subprocess SPMD cells + exhaustive kill matrices
 #              (aligned AND ragged geometries); run via `tools/ci.sh --slow`.
 #   property   the hypothesis-driven differential harnesses
-#              (tests/test_general_shapes.py, tests/test_properties.py).
+#              (tests/test_general_shapes.py, tests/test_properties.py,
+#              tests/test_elastic_properties.py).
 #              They run inside tier-1 whenever hypothesis is importable; the
 #              guard below makes a missing hypothesis a LOUD failure instead
 #              of a silent skip, so the property tier cannot quietly vanish
@@ -40,7 +41,8 @@ if python -c "import hypothesis" 2>/dev/null; then
     echo "hypothesis present: property harnesses run in tier-1"
 else
     echo "ERROR: hypothesis is not installed — the property tier" >&2
-    echo "(tests/test_general_shapes.py, tests/test_properties.py)" >&2
+    echo "(tests/test_general_shapes.py, tests/test_properties.py," >&2
+    echo "tests/test_elastic_properties.py)" >&2
     echo "would be silently skipped. Install hypothesis, or set" >&2
     echo "CI_ALLOW_MISSING_HYPOTHESIS=1 to acknowledge the gap." >&2
     if [[ "${CI_ALLOW_MISSING_HYPOTHESIS:-0}" != "1" ]]; then
@@ -77,7 +79,9 @@ echo "== cache round-trip; CI_REQUIRE_COMPILED_KERNELS=1 to demand Pallas) =="
 python tools/kernel_smoke.py
 
 echo "== benchmark smoke (writes BENCH_core.json; fails loudly if the =="
-echo "== online stepped overhead regresses >25% over the recorded baseline =="
+echo "== online stepped overhead or the elastic SHRINK continuation =="
+echo "== regresses >25% over the recorded baseline; escapes: =="
+echo "== CI_ALLOW_ONLINE_REGRESSION=1 / CI_ALLOW_ELASTIC_REGRESSION=1) =="
 python -m benchmarks.run --quick
 
 echo "CI OK"
