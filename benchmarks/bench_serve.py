@@ -1,0 +1,243 @@
+"""Serve-path benchmarks: what multi-tenant continuous sweep batching
+costs, with and without a mid-batch lane kill.
+
+A seeded synthetic heavy-traffic generator drives ragged factorization /
+least-squares requests through ``repro.serve.qr_service.QRService`` — a
+resident batch of >= 8 concurrent tenants multiplexed through the ONE
+resident compiled ``sweep_step`` segment runner. Reported:
+
+(a) *Sustained traffic*: requests/sec and per-request latency p50/p99 over
+    a full drain (submission -> retirement, queue wait included).
+(b) *Kill under load*: the same traffic with a lane killed mid-batch —
+    every resident tenant REBUILDs from its XOR buddies and still retires
+    the bitwise failure-free R (asserted here, not just claimed). The
+    kill:free wall ratio is the recovery-under-load overhead.
+(c) *Continuous vs static batching*: the gated headline — continuous
+    (per-panel slots, admission machinery, per-boundary detector polls)
+    vs the express ``drain_batched`` path (one vmapped sweep per bucket).
+    Measured as a median of interleaved ratios so box drift cancels
+    (the ``bench_online`` methodology).
+
+``benchmarks/run.py`` stores the record under ``BENCH_core.json``'s
+``"serve"`` key and fails CI loudly (``check_regression``) if the
+continuous-batching overhead regresses more than 25% over the recorded
+baseline. ``CI_ALLOW_SERVE_REGRESSION=1`` acknowledges a known regression
+without greening it.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import SimComm, block_row_layout, caqr_factorize
+from repro.serve.qr_service import QRService
+
+REGRESSION_TOLERANCE = 1.25
+_METHOD = 1
+
+
+def _config(quick: bool) -> Dict:
+    return {
+        "P": 4, "b": 4, "quick": quick,
+        "bucket": (8, 12) if quick else (16, 20),
+        "requests": 8 if quick else 24,
+        "slots": 8,
+        "lstsq_frac": 0.25,
+        "kill_lane": 2,
+        "kill_tick": 2,
+    }
+
+
+def _traffic(cfg: Dict) -> List[Tuple[np.ndarray, Optional[np.ndarray]]]:
+    rng = np.random.default_rng(31)
+    m_loc, n_b = cfg["bucket"]
+    reqs = []
+    for i in range(cfg["requests"]):
+        m = int(rng.integers(cfg["b"], cfg["P"] * m_loc + 1))
+        n = int(rng.integers(cfg["b"], n_b - 1))
+        A = rng.standard_normal((m, n)).astype(np.float32)
+        rhs = None
+        if m >= n and rng.random() < cfg["lstsq_frac"]:
+            rhs = rng.standard_normal((m, 2)).astype(np.float32)
+        reqs.append((A, rhs))
+    return reqs
+
+
+def _service(comm, cfg: Dict) -> QRService:
+    return QRService(comm, panel_width=cfg["b"], buckets=[cfg["bucket"]],
+                     max_slots=cfg["slots"])
+
+
+def _drive(comm, cfg: Dict, traffic, kill: bool) -> Tuple[float, QRService, int]:
+    """One full traffic drain; returns (wall_s, service, peak_resident)."""
+    svc = _service(comm, cfg)
+    t0 = time.perf_counter()
+    for A, rhs in traffic:
+        svc.submit(A, rhs)
+    peak = 0
+    killed = False
+    while svc.queue or svc.resident:
+        if kill and not killed and svc.tick_count == cfg["kill_tick"]:
+            svc.kill_lane(cfg["kill_lane"])
+            killed = True
+        svc.tick()
+        peak = max(peak, svc.resident)
+    return time.perf_counter() - t0, svc, peak
+
+
+def _percentiles(svc: QRService) -> Dict:
+    lat = np.sort([r.latency_s for r in svc.results.values()])
+    return {
+        "p50_ms": float(lat[len(lat) // 2] * 1e3),
+        "p99_ms": float(lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3),
+    }
+
+
+def _assert_bitwise_solo(comm, cfg: Dict, svc: QRService, traffic) -> None:
+    """The acceptance criterion, enforced in-bench: every tenant's R is
+    bitwise-identical to its failure-free solo factorization (same
+    bucket-padded matrix)."""
+    import jax.numpy as jnp
+
+    # rids are assigned in submission order by the service's own counter
+    for rid, (A, rhs) in zip(
+            (f"req{i}" for i in range(len(traffic))), traffic):
+        A_aug = A if rhs is None else np.concatenate([A, rhs], axis=1)
+        A0 = block_row_layout(jnp.asarray(A_aug), cfg["P"], *cfg["bucket"])
+        solo = caqr_factorize(A0, comm, cfg["b"], use_scan=False,
+                              collect_bundles=True)
+        k, n = min(A.shape), A.shape[1]
+        got, ref = svc.results[rid].R, np.asarray(solo.R[0])[:k, :n]
+        assert np.array_equal(got, ref), (
+            f"{rid}: served R diverged from the solo factorization "
+            f"(max err {np.abs(got - ref).max():.2e})")
+
+
+def suite(quick: bool = False) -> Dict:
+    cfg = _config(quick)
+    comm = SimComm(cfg["P"])
+    traffic = _traffic(cfg)
+    reps = 2 if quick else 3
+
+    # warmup: one drain compiles every (bucket, cursor) segment + the
+    # rebuild shapes of the kill path; steady-state traffic compiles nothing
+    _drive(comm, cfg, traffic, kill=True)
+    warm_programs = _service(comm, cfg).compiled_programs
+
+    best = None
+    for _ in range(reps):
+        w, svc, pk = _drive(comm, cfg, traffic, kill=False)
+        if best is None or w < best[0]:
+            best = (w, svc, pk)
+    wall_free, svc_free, peak = best
+    assert peak >= min(cfg["requests"], cfg["slots"]), (
+        f"resident batch never reached {cfg['slots']} ({peak})")
+    assert _service(comm, cfg).compiled_programs == warm_programs, (
+        "steady-state traffic recompiled the resident segment runner")
+    _assert_bitwise_solo(comm, cfg, svc_free, traffic)
+
+    best_k = None
+    for _ in range(reps):
+        w, svc, _pk = _drive(comm, cfg, traffic, kill=True)
+        if best_k is None or w < best_k[0]:
+            best_k = (w, svc)
+    wall_kill, svc_kill = best_k
+    heals = sum(len(r.events) for r in svc_kill.results.values())
+    assert heals >= 1, "the mid-batch kill was never detected/healed"
+    _assert_bitwise_solo(comm, cfg, svc_kill, traffic)
+
+    def batched_drain() -> float:
+        svc = _service(comm, cfg)
+        t0 = time.perf_counter()
+        for A, rhs in traffic:
+            svc.submit(A, rhs)
+        svc.drain_batched()
+        return time.perf_counter() - t0
+
+    batched_drain()  # compile the vmapped bucket program
+    # the gated ratio: continuous machinery vs the express static batch,
+    # interleaved so box drift inflates both sides of a pair and cancels
+    ratios = []
+    for _ in range(reps):
+        w_c, _svc, _pk = _drive(comm, cfg, traffic, kill=False)
+        ratios.append(w_c / max(batched_drain(), 1e-9))
+    overhead = statistics.median(ratios)
+
+    n_req = cfg["requests"]
+    return {
+        "method": _METHOD,
+        "config": cfg,
+        "traffic": {
+            "req_per_s": n_req / wall_free,
+            "resident_peak": peak,
+            "ticks": svc_free.tick_count,
+            "compiled_programs": warm_programs,
+            **_percentiles(svc_free),
+        },
+        "kill": {
+            "req_per_s": n_req / wall_kill,
+            "tenant_rebuilds": heals,
+            "kill_vs_free": wall_kill / max(wall_free, 1e-9),
+            **_percentiles(svc_kill),
+        },
+        "continuous_vs_batched": overhead,
+    }
+
+
+def check_regression(serve: Dict, baseline: Optional[Dict]) -> Tuple[bool, str]:
+    """Gate for ``run.py``/``ci.sh``: the continuous-batching overhead must
+    stay within ``REGRESSION_TOLERANCE`` of the recorded baseline (same
+    quick tier + method only). First run records and passes.
+    ``CI_ALLOW_SERVE_REGRESSION=1`` acknowledges without greening."""
+    got = serve["continuous_vs_batched"]
+    if not baseline:
+        return True, f"serve overhead {got:.2f}x (no baseline recorded yet)"
+    if baseline.get("config", {}).get("quick") != serve["config"]["quick"]:
+        return True, (f"serve overhead {got:.2f}x (baseline is from the "
+                      "other tier; not comparable)")
+    if baseline.get("method") != serve["method"]:
+        return True, (f"serve overhead {got:.2f}x (baseline predates the "
+                      "current measurement methodology; re-recording)")
+    base = baseline["continuous_vs_batched"]
+    if got <= base * REGRESSION_TOLERANCE:
+        return True, f"serve overhead {got:.2f}x vs baseline {base:.2f}x: OK"
+    msg = (f"serve continuous-batching overhead REGRESSED: {got:.2f}x vs "
+           f"baseline {base:.2f}x (> {REGRESSION_TOLERANCE:.2f}x tolerance)")
+    if os.environ.get("CI_ALLOW_SERVE_REGRESSION") == "1":
+        return True, msg + " — acknowledged via CI_ALLOW_SERVE_REGRESSION=1"
+    return False, msg
+
+
+def baseline_to_record(serve: Dict, baseline: Optional[Dict]) -> Dict:
+    """What a passing run persists: the fresh measurement with the gated
+    ratio floored at 90% of the previous comparable baseline (the damped
+    walk-down of ``bench_online``)."""
+    import copy
+
+    rec = copy.deepcopy(serve)
+    if not baseline:
+        return rec
+    comparable = (
+        baseline.get("config", {}).get("quick") == serve["config"]["quick"]
+        and baseline.get("method") == serve["method"]
+    )
+    if comparable:
+        rec["continuous_vs_batched"] = max(
+            serve["continuous_vs_batched"],
+            baseline["continuous_vs_batched"] * 0.9,
+        )
+    return rec
+
+
+def main() -> None:
+    import json
+
+    print(json.dumps(suite(quick=False), indent=1))
+
+
+if __name__ == "__main__":
+    main()

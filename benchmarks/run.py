@@ -132,6 +132,22 @@ def main() -> None:
           f"(straggler excess {sp['config']['excess_us_per_boundary']:.0f}"
           f"us/boundary)")
 
+    from benchmarks import bench_serve
+
+    serve = bench_serve.suite(quick=args.quick)
+    tr, kl = serve["traffic"], serve["kill"]
+    print()
+    print("# serve path: continuous sweep batching (QR-as-a-service)")
+    print(f"# {serve['config']['requests']} ragged requests, "
+          f"{tr['resident_peak']} resident, "
+          f"{tr['compiled_programs']} compiled segments: "
+          f"{tr['req_per_s']:.1f} req/s "
+          f"(p50 {tr['p50_ms']:.0f}ms p99 {tr['p99_ms']:.0f}ms); "
+          f"mid-batch kill: {kl['req_per_s']:.1f} req/s, "
+          f"{kl['tenant_rebuilds']} tenant REBUILDs, "
+          f"{kl['kill_vs_free']:.2f}x; "
+          f"continuous vs batched {serve['continuous_vs_batched']:.2f}x")
+
     # gate BEFORE recording: a regressed measurement must not become the
     # next run's baseline (the gate would otherwise fail exactly once),
     # and a passing one is recorded with the damped-baseline floor so a
@@ -139,6 +155,8 @@ def main() -> None:
     ok, msg = bench_online.check_regression(online, baseline.get("online"))
     elastic_ok, elastic_msg = bench_elastic.check_regression(
         elastic, baseline.get("elastic"))
+    serve_ok, serve_msg = bench_serve.check_regression(
+        serve, baseline.get("serve"))
     # kernels-beat-oracle gate: intra-run (compiled rows vs their oracles),
     # no baseline needed — but the verdict is recorded alongside the rows
     kernel_ok, kernel_msg = bench_core.check_kernel_regression(rows)
@@ -149,20 +167,26 @@ def main() -> None:
               "online": bench_online.baseline_to_record(
                   online, baseline.get("online")),
               "elastic": bench_elastic.baseline_to_record(
-                  elastic, baseline.get("elastic"))}
+                  elastic, baseline.get("elastic")),
+              "serve": bench_serve.baseline_to_record(
+                  serve, baseline.get("serve"))}
     if not ok:
         record["online"] = baseline.get("online")   # keep the old baseline
         record["online_rejected"] = online          # the failing numbers
     if not elastic_ok:
         record["elastic"] = baseline.get("elastic")
         record["elastic_rejected"] = elastic
+    if not serve_ok:
+        record["serve"] = baseline.get("serve")
+        record["serve_rejected"] = serve
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")
     print(f"# online regression gate: {msg}")
     print(f"# elastic regression gate: {elastic_msg}")
+    print(f"# serve regression gate: {serve_msg}")
     print(f"# kernel gate: {kernel_msg}")
-    if not ok or not kernel_ok or not elastic_ok:
+    if not ok or not kernel_ok or not elastic_ok or not serve_ok:
         raise SystemExit(2)
 
     if not args.quick:

@@ -79,3 +79,27 @@ def restore(directory: str, params_like, opt_like, step: Optional[int] = None) -
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     return fill(params_like, pz), fill(opt_like, oz), manifest
+
+
+def restore_params(directory: str, params_like, step: Optional[int] = None) -> Tuple[Any, Dict]:
+    """Restore only the parameter tree (+ manifest) from a checkpoint.
+
+    The params-only path for serving/evaluation: no optimizer skeleton is
+    needed (and none is loaded — ``restore`` would otherwise demand an
+    ``opt_like`` template matching the saved optimizer structure, which a
+    serving process does not have)."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint in {directory}"
+    tag = f"step_{step:08d}"
+    path = os.path.join(directory, tag)
+    pz = np.load(path + ".params.npz")
+    manifest = json.load(open(path + ".json"))
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    leaves = []
+    for path_, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path_)
+        arr = pz[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest

@@ -46,6 +46,7 @@ from repro.core.caqr import (
     PanelFactors,
     SweepGeometry,
     assemble_R,
+    block_row_layout,
     caqr_apply_qt,
     caqr_apply_qt_batched,
     caqr_factorize,
@@ -67,7 +68,8 @@ __all__ = [
     "tsqr_orthonormalize", "RecoveryBundle", "TrailingLevelStep",
     "trailing_combine_level", "trailing_update_baseline",
     "trailing_update_ft", "CAQRResult", "PanelFactors", "SweepGeometry",
-    "assemble_R", "caqr_apply_qt", "caqr_apply_qt_batched",
+    "assemble_R", "block_row_layout", "caqr_apply_qt",
+    "caqr_apply_qt_batched",
     "caqr_factorize", "caqr_factorize_batched", "caqr_factorize_spmd",
     "lane_geometry", "pad_to_geometry", "panel_geometry", "sweep_geometry",
     "recovery", "lstsq",

@@ -135,6 +135,29 @@ def pad_to_geometry(comm, A_local: jax.Array, geom: SweepGeometry) -> jax.Array:
     return comm.map_local(lambda A: jnp.pad(A, ((0, dr), (0, dc))))(A_local)
 
 
+def block_row_layout(A: jax.Array, P: int, m_loc: Optional[int] = None,
+                     n: Optional[int] = None) -> jax.Array:
+    """Distribute a whole ``(m, q)`` matrix into the 1-D block-row SimComm
+    layout ``(P, m_loc, n)``: rows are zero-padded to ``P * m_loc`` and
+    split contiguously, columns zero-padded to ``n``. Zero padding is exact
+    for the sweep (DESIGN.md §7), so this is also the *bucket* embedding of
+    the serving layer: pad every ragged request to one of a few compiled
+    ``(m_loc, n)`` bucket shapes and batch them through the same program
+    (``caqr_factorize_batched`` / ``repro.serve.qr_service``).
+
+    ``m_loc`` defaults to ``ceil(m / P)`` (the tightest layout), ``n`` to
+    the matrix's own width."""
+    m, q = A.shape
+    if m_loc is None:
+        m_loc = -(-m // P)
+    if n is None:
+        n = q
+    assert m <= P * m_loc and q <= n, (
+        f"matrix ({m}, {q}) exceeds the ({P}x{m_loc}, {n}) bucket")
+    A = jnp.pad(A, ((0, P * m_loc - m), (0, n - q)))
+    return A.reshape(P, m_loc, n)
+
+
 def panel_geometry(comm, k: int, b: int, m_loc: int):
     """Sweep bookkeeping of panel ``k`` (static): returns
     ``(col0, t_lane, row_start, active)``.

@@ -79,6 +79,25 @@ from repro.ft.stragglers import (
 _SEGMENT_CACHE: Dict[Tuple, Callable] = {}
 
 FaultHook = Callable[[object, SweepState], SweepState]
+BoundaryHook = Callable[["SweepOrchestrator"], None]
+
+
+def compiled_segment(comm, n_points: int) -> Callable[[SweepState], SweepState]:
+    """The RESIDENT compiled segment runner: a process-wide jitted
+    ``run_steps(comm, state, n_points)`` shared by every caller over the
+    same ``(comm kind, P, segment size)`` — the orchestrator's segments and
+    the multi-tenant ``repro.serve.qr_service`` slots all dispatch through
+    the same callable. jax's jit cache then specializes per state treedef
+    (= per geometry + cursor), so two tenants at the same bucket and sweep
+    point share one compiled program; after one warm sweep per bucket no
+    new compilation happens no matter how many requests flow through
+    (``fn._cache_size()`` counts the resident specializations)."""
+    key = (type(comm).__name__, comm.axis_size(), n_points)
+    fn = _SEGMENT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda s: run_steps(comm, s, n_points))
+        _SEGMENT_CACHE[key] = fn
+    return fn
 
 
 class SweepOrchestrator:
@@ -117,6 +136,15 @@ class SweepOrchestrator:
         Callables ``hook(comm, state) -> state`` run at every boundary
         *before* the detector poll — test/demo fault injectors
         (``ScriptedKiller``, ``WallClockKiller``).
+    boundary_hooks:
+        Callables ``hook(orchestrator)`` run at every boundary *after*
+        detection + recovery, when the state is healed and consistent —
+        the admission surface: a serving layer can inspect
+        ``orch.state.cursor``, swap work in at a panel boundary, or
+        harvest per-boundary telemetry. Mutating ``orch.state`` here is
+        legal exactly when the cursor sits at a panel boundary
+        (``deposit_boundary`` semantics) — ``repro.serve.qr_service``
+        builds its continuous-batching admission on this contract.
     store, persist_every:
         If a store is given, ``store.push(state)`` every ``persist_every``
         boundaries (default 1 = every boundary) and at the final one —
@@ -167,6 +195,7 @@ class SweepOrchestrator:
         jit_segments: bool = True,
         step_fn: Optional[Callable[[SweepState], SweepState]] = None,
         fault_hooks: Sequence[FaultHook] = (),
+        boundary_hooks: Sequence[BoundaryHook] = (),
         store=None,
         persist_every: Optional[int] = None,
         semantics: Semantics = Semantics.REBUILD,
@@ -199,6 +228,7 @@ class SweepOrchestrator:
                 "shard_map backend (repro.launch.spmd_qr.make_spmd_sweep_step)"
             )
         self.fault_hooks = list(fault_hooks)
+        self.boundary_hooks = list(boundary_hooks)
         self.store = store
         if store is not None and persist_every is None:
             persist_every = 1  # a store with no cadence means every boundary
@@ -234,13 +264,7 @@ class SweepOrchestrator:
     def _stepped(self, state: SweepState, n_points: int) -> SweepState:
         if not self.jit_segments:
             return run_steps(self.comm, state, n_points)
-        key = (type(self.comm).__name__, self.comm.axis_size(), n_points)
-        fn = _SEGMENT_CACHE.get(key)
-        if fn is None:
-            comm = self.comm
-            fn = jax.jit(lambda s: run_steps(comm, s, n_points))
-            _SEGMENT_CACHE[key] = fn
-        return fn(state)
+        return compiled_segment(self.comm, n_points)(state)
 
     def _fused_segment(self, state: SweepState) -> SweepState:
         # a state resumed mid-panel first steps to the next leaf boundary
@@ -306,6 +330,8 @@ class SweepOrchestrator:
             if self.elastic is not None and point == self.grow_at:
                 self.elastic.request_grow()
             self._maybe_transition()
+            for hook in self.boundary_hooks:
+                hook(self)
             if self.store is not None and self.persist_every and (
                     boundary % self.persist_every == 0
                     or self.state.cursor is None):

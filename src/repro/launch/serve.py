@@ -30,7 +30,10 @@ def main() -> None:
     cfg = get_config(args.arch) if args.full else get_smoke(args.arch)
     params = tf.init_params(cfg, jax.random.key(0))
     if args.ckpt:
-        params, _, _ = ckpt_save.restore(args.ckpt, params, params)
+        # params-only restore: serving has no optimizer skeleton to offer
+        # as the opt_like template (and must not pass the params tree as
+        # one — the opt npz has a different structure)
+        params, _ = ckpt_save.restore_params(args.ckpt, params)
     engine = Engine(cfg, params, ServeConfig(
         max_new_tokens=args.max_new, temperature=args.temperature))
     rng = np.random.default_rng(0)

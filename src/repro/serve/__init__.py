@@ -1,3 +1,5 @@
-"""Serving engine: prefill + batched cached decode."""
+"""Serving: the token engine (prefill + batched cached decode) and the
+QR-as-a-service front end (continuous sweep batching, ``qr_service``)."""
 from repro.serve.engine import Engine, ServeConfig
-__all__ = ["Engine", "ServeConfig"]
+from repro.serve.qr_service import QRRequest, QRResult, QRService
+__all__ = ["Engine", "ServeConfig", "QRRequest", "QRResult", "QRService"]

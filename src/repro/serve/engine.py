@@ -30,10 +30,17 @@ class ServeConfig:
     seed: int = 0
 
 
-def _prefill_to_decode_caches(cfg: ModelConfig, caches, prompt_len: int, cache_len: int):
-    """Convert full prefill KV caches to decode layout: pad/crop to
-    cache_len; rolling layers keep the last `window` entries rolled into
-    pos%window order. SSM/LRU states pass through."""
+def _prefill_to_decode_caches(cfg: ModelConfig, caches, prompt_len: int,
+                              cache_len: int, mixer: str = "G"):
+    """Convert full prefill KV caches to decode layout: pad/crop each layer
+    to ITS decode cache length — ``_layer_cache_len(cfg, mixer, cache_len)``,
+    the sliding window for "L" layers, the global ``cache_len`` otherwise.
+    Cropped (rolling) layers keep the last ``window`` entries rolled into
+    ``pos % window`` order — decode's rolling addressing and masking assume
+    ``S_cache == window``, so using the global ``cache_len`` as the window
+    (the pre-fix behavior) corrupts an "L" layer whenever
+    ``cache_len != sliding_window``. SSM/LRU states pass through."""
+    tgt = _layer_cache_len(cfg, mixer, cache_len)
 
     def conv(c):
         if isinstance(c, attn.KVCache):
@@ -41,12 +48,13 @@ def _prefill_to_decode_caches(cfg: ModelConfig, caches, prompt_len: int, cache_l
             # be present when layers are scanned.
             S_full = c.k.shape[-3]
             nd = c.k.ndim
-            if cache_len >= S_full:
+            if tgt >= S_full:
                 pad = [(0, 0)] * nd
-                pad[-3] = (0, cache_len - S_full)
+                pad[-3] = (0, tgt - S_full)
                 return attn.KVCache(k=jnp.pad(c.k, pad), v=jnp.pad(c.v, pad))
-            # rolling layers: keep last cache_len entries at pos%window slots
-            w = cache_len
+            # rolling layer: keep the last `w` entries at pos%w slots, where
+            # w is the LAYER's window, not the global cache_len
+            w = tgt
             sl = (Ellipsis, slice(S_full - w, S_full), slice(None), slice(None))
             k = jnp.roll(c.k[sl], prompt_len % w, axis=-3)
             v = jnp.roll(c.v[sl], prompt_len % w, axis=-3)
@@ -92,8 +100,7 @@ class Engine:
         def relayout(c, mixer):
             if not isinstance(c, attn.KVCache):
                 return c
-            tgt = _layer_cache_len(cfg, mixer, total)
-            return _prefill_to_decode_caches(cfg, c, S0, tgt)
+            return _prefill_to_decode_caches(cfg, c, S0, total, mixer=mixer)
 
         # caches structure: {"groups": {l{i}: cache}, rem{r}: cache}
         new_caches = {}
@@ -109,18 +116,15 @@ class Engine:
                 new_caches[key] = relayout(caches[key], cfg.mixer_at(li))
         caches = new_caches
 
+        # emit-then-feed: out[:, t] is the prediction of position S0 + t,
+        # starting with the prefill's own next-token prediction (the
+        # previous feed-then-emit loop consumed it without emitting,
+        # shifting every output one position late)
         key = jax.random.key(scfg.seed)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        lg = logits[:, -1]
         out: List[np.ndarray] = []
         done = np.zeros((B,), bool)
         for t in range(scfg.max_new_tokens):
-            pos = jnp.asarray(S0 + t, jnp.int32)
-            args = (self.params, tok, pos, caches)
-            if cfg.encoder is not None:
-                logits, caches = self._step(*args, enc_out)
-            else:
-                logits, caches = self._step(*args)
-            lg = logits[:, -1]
             if scfg.temperature > 0:
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(sub, lg / scfg.temperature)[:, None]
@@ -134,4 +138,13 @@ class Engine:
                 done |= step_out == scfg.eos_id
                 if done.all():
                     break
+            if t == scfg.max_new_tokens - 1:
+                break
+            pos = jnp.asarray(S0 + t, jnp.int32)
+            args = (self.params, tok, pos, caches)
+            if cfg.encoder is not None:
+                logits, caches = self._step(*args, enc_out)
+            else:
+                logits, caches = self._step(*args)
+            lg = logits[:, -1]
         return np.stack(out, axis=1)

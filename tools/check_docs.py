@@ -29,6 +29,7 @@ REQUIRED_HEADINGS = {
         "## Shape support",
         "## Execution model: one program, two paths",
         "### Semantics support",
+        "## Serving: QR-as-a-service",
     ],
     "DESIGN.md": [
         "## 5. Recovery data-flow",
@@ -37,6 +38,7 @@ REQUIRED_HEADINGS = {
         "## 9. Online recovery and the sweep state machine",
         "## 10. Kernel fast path",
         "## 11. Elastic execution",
+        "## 12. Serving: QR-as-a-service",
     ],
 }
 

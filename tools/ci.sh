@@ -20,8 +20,12 @@
 #                        driver/training demo), the SPMD smoke tier
 #                        (examples/spmd_quickstart.py: shard_map FT sweep +
 #                        kill on a forced 4-device host mesh, checked
-#                        bitwise vs SimComm), the repro.ft docstring-example
-#                        doctests, the compiled-kernel smoke tier
+#                        bitwise vs SimComm), the serve smoke tier
+#                        (repro.launch.serve_qr: a QR-service traffic burst
+#                        with a mid-batch lane kill, every retired R
+#                        verified against numpy), the repro.ft
+#                        docstring-example doctests, the compiled-kernel
+#                        smoke tier
 #                        (tools/kernel_smoke.py: capability probe report,
 #                        compiled-dispatch parity vs the jnp oracles, and an
 #                        autotune cache round-trip — loud skip when no op
@@ -70,6 +74,10 @@ python examples/online_recovery.py   # runtime-detected kill + suspend/resume
 echo "== SPMD smoke (shard_map FT sweep on a forced 4-device host mesh) =="
 python examples/spmd_quickstart.py
 
+echo "== serve smoke (QR-as-a-service traffic burst + mid-batch lane =="
+echo "== kill; every retired R verified against numpy QR/lstsq) =="
+python -m repro.launch.serve_qr --requests 8 --kill-lane 2 --kill-tick 2
+
 echo "== repro.ft API doctest examples =="
 python -m doctest src/repro/ft/driver.py src/repro/ft/failures.py \
     src/repro/ft/semantics.py && echo "doctests OK"
@@ -79,9 +87,10 @@ echo "== cache round-trip; CI_REQUIRE_COMPILED_KERNELS=1 to demand Pallas) =="
 python tools/kernel_smoke.py
 
 echo "== benchmark smoke (writes BENCH_core.json; fails loudly if the =="
-echo "== online stepped overhead or the elastic SHRINK continuation =="
-echo "== regresses >25% over the recorded baseline; escapes: =="
-echo "== CI_ALLOW_ONLINE_REGRESSION=1 / CI_ALLOW_ELASTIC_REGRESSION=1) =="
+echo "== online stepped overhead, the elastic SHRINK continuation, or =="
+echo "== the serve continuous-batching overhead regresses >25% over the =="
+echo "== recorded baseline; escapes: CI_ALLOW_ONLINE_REGRESSION=1 / =="
+echo "== CI_ALLOW_ELASTIC_REGRESSION=1 / CI_ALLOW_SERVE_REGRESSION=1) =="
 python -m benchmarks.run --quick
 
 echo "CI OK"
