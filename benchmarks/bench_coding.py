@@ -1,0 +1,206 @@
+"""Coded-checksum-lane benchmarks: what surviving f simultaneous failures
+costs (``repro.ft.coding``).
+
+(a) *Overhead-vs-f curve*: the failure-free online sweep with
+    ``MDSScheme(f)`` re-encoding f GF(2^8) parity slots at every boundary,
+    for f = 1, 2, 3, against the XOR-scheme floor (whose refresh is a
+    no-op). Measured at P=8 (quick) and P=8 + P=16 (full). The gated
+    headline is the f=2 ratio at P=8 — the scheme the multi-failure test
+    tier runs — measured interleaved so box drift cancels.
+
+(b) *Joint-decode latency*: kill a former XOR-buddy pair mid-sweep (the
+    schedule that is UNRECOVERABLE under the XOR scheme) and report the
+    detection-to-recovered wall time of the joint GF decode plus its
+    multi-source read count.
+
+``benchmarks/run.py`` stores the record under ``BENCH_core.json``'s
+``"coding"`` key and fails CI (``check_regression``) if the f=2 encode
+overhead regresses more than 25% over the recorded baseline —
+``CI_ALLOW_CODING_REGRESSION=1`` acknowledges a known regression without
+greening it.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SimComm
+from repro.ft import MDSScheme, SweepOrchestrator, sweep_point
+from repro.ft.online.detect import ScriptedKiller
+
+# f=2 encode overhead may regress this much before CI fails
+REGRESSION_TOLERANCE = 1.25
+# measurement methodology version (baselines across bumps are incomparable)
+_METHOD = 1
+
+_FS = (1, 2, 3)
+
+
+def _geoms(quick: bool):
+    # (P, m_loc, n, b): 2 panels, every phase class, enough bytes per lane
+    # that the encode cost is not pure dispatch noise
+    if quick:
+        return [(8, 8, 16, 8)]
+    return [(8, 8, 16, 8), (16, 8, 16, 8)]
+
+
+def _wall_once(fn) -> float:
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _wall(fn, reps: int) -> float:
+    return min(_wall_once(fn) for _ in range(reps))
+
+
+def _ratio(fn_num, fn_den, reps: int) -> float:
+    """Median of per-rep interleaved ratios (see bench_online._ratio): box
+    drift inflates both sides of a pair and cancels in the gated number."""
+    return statistics.median(
+        _wall_once(fn_num) / max(_wall_once(fn_den), 1e-9)
+        for _ in range(reps)
+    )
+
+
+def bench_overhead(quick: bool = False) -> Dict:
+    """(a): the failure-free stepped sweep with f parity slots re-encoded
+    at every boundary, against the XOR floor, for f in {1, 2, 3}."""
+    reps = 5 if quick else 7
+    by_world = {}
+    gated = None
+    for P, m_loc, n, b in _geoms(quick):
+        comm = SimComm(P)
+        rng = np.random.default_rng(31)
+        A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+
+        xor_run = lambda: SweepOrchestrator(A, comm, b).run()
+        jax.block_until_ready(jax.tree_util.tree_leaves(xor_run()))
+        us_xor = _wall(xor_run, reps)
+
+        curve = {}
+        for f in _FS:
+            scheme = MDSScheme(f=f)
+            run = lambda: SweepOrchestrator(A, comm, b, scheme=scheme).run()
+            jax.block_until_ready(jax.tree_util.tree_leaves(run()))
+            curve[str(f)] = {
+                "us": _wall(run, reps),
+                "overhead_vs_xor": _ratio(run, xor_run, max(reps - 2, 3)),
+            }
+        by_world[str(P)] = {
+            "config": {"P": P, "m_loc": m_loc, "n": n, "b": b},
+            "us_xor": us_xor,
+            "by_f": curve,
+        }
+        if P == 8:
+            gated = curve["2"]["overhead_vs_xor"]
+    return {
+        "method": _METHOD,
+        "quick": quick,
+        "by_world": by_world,
+        # the gated headline: f=2 encode overhead at P=8
+        "overhead_f2_vs_xor": gated,
+    }
+
+
+def bench_decode_latency(quick: bool = False) -> Dict:
+    """(b): a buddy-pair double kill — the XOR scheme's wall — healed by
+    the joint GF decode at runtime; detection-to-recovered per lane."""
+    P, m_loc, n, b = _geoms(quick)[0]
+    comm = SimComm(P)
+    rng = np.random.default_rng(32)
+    A = jnp.asarray(rng.standard_normal((P, m_loc, n)), jnp.float32)
+    levels = P.bit_length() - 1
+    point = sweep_point(1, "trailing", levels - 1)
+    pair = [2, 3]  # level-0 XOR buddies: unrecoverable without the code
+
+    stats = []
+    for _ in range(2 if quick else 3):
+        orch = SweepOrchestrator(
+            A, comm, b, scheme=MDSScheme(f=2),
+            fault_hooks=[ScriptedKiller({point: list(pair)})])
+        res = orch.run()
+        assert len(res.events) == len(pair)
+        stats.append({
+            "us_decode": res.events[0].elapsed_s * 1e6,
+            "reads": len(res.events[0].reads),
+        })
+    steady = stats[-1]  # first run pays the decode compile
+    return {
+        "config": {"P": P, "m_loc": m_loc, "n": n, "b": b,
+                   "point": list(point), "pair": pair, "quick": quick},
+        "us_detect_to_recovered": steady["us_decode"],
+        "reads": steady["reads"],
+    }
+
+
+def suite(quick: bool = False) -> Dict:
+    return {
+        "overhead": bench_overhead(quick),
+        "decode": bench_decode_latency(quick),
+    }
+
+
+def check_regression(coding: Dict, baseline: Optional[Dict]) -> Tuple[bool, str]:
+    """Gate for ``run.py``/``ci.sh``: the f=2 encode overhead must stay
+    within ``REGRESSION_TOLERANCE`` of the recorded baseline (same quick
+    tier and methodology only). First run records and passes.
+    ``CI_ALLOW_CODING_REGRESSION=1`` acknowledges a known regression."""
+    got = coding["overhead"]["overhead_f2_vs_xor"]
+    if not baseline:
+        return True, f"coding f=2 overhead {got:.2f}x (no baseline yet)"
+    base_ov = baseline.get("overhead", {})
+    if base_ov.get("quick") != coding["overhead"]["quick"]:
+        return True, (f"coding f=2 overhead {got:.2f}x (baseline is from "
+                      "the other tier; not comparable)")
+    if base_ov.get("method") != coding["overhead"]["method"]:
+        return True, (f"coding f=2 overhead {got:.2f}x (baseline predates "
+                      "the current methodology; re-recording)")
+    base = base_ov["overhead_f2_vs_xor"]
+    if got <= base * REGRESSION_TOLERANCE:
+        return True, f"coding f=2 overhead {got:.2f}x vs baseline {base:.2f}x: OK"
+    msg = (f"coding encode overhead REGRESSED: {got:.2f}x vs baseline "
+           f"{base:.2f}x (> {REGRESSION_TOLERANCE:.2f}x tolerance)")
+    if os.environ.get("CI_ALLOW_CODING_REGRESSION") == "1":
+        return True, msg + " — acknowledged via CI_ALLOW_CODING_REGRESSION=1"
+    return False, msg
+
+
+def baseline_to_record(coding: Dict, baseline: Optional[Dict]) -> Dict:
+    """A passing run persists the fresh curve with the gated ratio floored
+    at 90% of the previous comparable baseline (the same damped-ratchet
+    rule as the online gate: lucky-fast outliers cannot set a bar ordinary
+    runs miss by noise)."""
+    import copy
+
+    rec = copy.deepcopy(coding)
+    if not baseline:
+        return rec
+    base_ov = baseline.get("overhead", {})
+    comparable = (
+        base_ov.get("quick") == coding["overhead"]["quick"]
+        and base_ov.get("method") == coding["overhead"]["method"]
+    )
+    if comparable:
+        rec["overhead"]["overhead_f2_vs_xor"] = max(
+            coding["overhead"]["overhead_f2_vs_xor"],
+            base_ov["overhead_f2_vs_xor"] * 0.9,
+        )
+    return rec
+
+
+def main() -> None:
+    import json
+
+    print(json.dumps(suite(quick=False), indent=1))
+
+
+if __name__ == "__main__":
+    main()

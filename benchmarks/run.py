@@ -148,6 +148,21 @@ def main() -> None:
           f"{kl['kill_vs_free']:.2f}x; "
           f"continuous vs batched {serve['continuous_vs_batched']:.2f}x")
 
+    from benchmarks import bench_coding
+
+    coding = bench_coding.suite(quick=args.quick)
+    ov = coding["overhead"]
+    print()
+    print("# coded checksum lanes: overhead-vs-f + joint-decode latency")
+    print("P,f,us_sweep,overhead_vs_xor")
+    for P_, world in ov["by_world"].items():
+        for f_, row in world["by_f"].items():
+            print(f"{P_},{f_},{row['us']:.0f},{row['overhead_vs_xor']:.2f}")
+    dec = coding["decode"]
+    print(f"# f=2 overhead {ov['overhead_f2_vs_xor']:.2f}x vs XOR floor; "
+          f"buddy-pair joint decode {dec['us_detect_to_recovered']:.0f}us "
+          f"({dec['reads']} reads)")
+
     # gate BEFORE recording: a regressed measurement must not become the
     # next run's baseline (the gate would otherwise fail exactly once),
     # and a passing one is recorded with the damped-baseline floor so a
@@ -157,6 +172,8 @@ def main() -> None:
         elastic, baseline.get("elastic"))
     serve_ok, serve_msg = bench_serve.check_regression(
         serve, baseline.get("serve"))
+    coding_ok, coding_msg = bench_coding.check_regression(
+        coding, baseline.get("coding"))
     # kernels-beat-oracle gate: intra-run (compiled rows vs their oracles),
     # no baseline needed — but the verdict is recorded alongside the rows
     kernel_ok, kernel_msg = bench_core.check_kernel_regression(rows)
@@ -169,7 +186,9 @@ def main() -> None:
               "elastic": bench_elastic.baseline_to_record(
                   elastic, baseline.get("elastic")),
               "serve": bench_serve.baseline_to_record(
-                  serve, baseline.get("serve"))}
+                  serve, baseline.get("serve")),
+              "coding": bench_coding.baseline_to_record(
+                  coding, baseline.get("coding"))}
     if not ok:
         record["online"] = baseline.get("online")   # keep the old baseline
         record["online_rejected"] = online          # the failing numbers
@@ -179,14 +198,19 @@ def main() -> None:
     if not serve_ok:
         record["serve"] = baseline.get("serve")
         record["serve_rejected"] = serve
+    if not coding_ok:
+        record["coding"] = baseline.get("coding")
+        record["coding_rejected"] = coding
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")
     print(f"# online regression gate: {msg}")
     print(f"# elastic regression gate: {elastic_msg}")
     print(f"# serve regression gate: {serve_msg}")
+    print(f"# coding regression gate: {coding_msg}")
     print(f"# kernel gate: {kernel_msg}")
-    if not ok or not kernel_ok or not elastic_ok or not serve_ok:
+    if not ok or not kernel_ok or not elastic_ok or not serve_ok \
+            or not coding_ok:
         raise SystemExit(2)
 
     if not args.quick:

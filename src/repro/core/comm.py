@@ -36,6 +36,7 @@ from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class AxisComm:
@@ -93,6 +94,21 @@ class AxisComm:
         into = x if into is None else into
         got = self.ppermute(x, [(src, dst)])
         return self.where_lane(dst, got, into, lane_axis)
+
+    def xor_reduce(self, x, lane_axis: int = 0):
+        """Bitwise-XOR all-reduce of a uint8 array over the lane axis — the
+        parity collective of the coded checksum lanes (``repro.ft.coding``).
+        XLA has no XOR all-reduce, so it lowers as 8 bit-planes summed with
+        ``psum`` mod 2 (exact: integer arithmetic). Every lane holds the
+        reduced value; ``lane_axis`` is ignored (local arrays carry no lane
+        axis)."""
+        del lane_axis
+        bits = jnp.stack([(x >> k) & jnp.uint8(1) for k in range(8)])
+        bits = self.psum(bits.astype(jnp.int32)) % 2
+        out = jnp.zeros(x.shape, jnp.uint8)
+        for k in range(8):
+            out = out | (bits[k].astype(jnp.uint8) << k)
+        return out
 
 
 class SimComm:
@@ -164,6 +180,15 @@ class SimComm:
         return into.at[self._lane_index(dst, lane_axis)].set(
             x[self._lane_index(src, lane_axis)]
         )
+
+    def xor_reduce(self, x, lane_axis: int = 0):
+        """Bitwise-XOR reduction over the lane axis (``repro.ft.coding``'s
+        parity collective). The lane axis is reduced away: the parity is a
+        checksum-lane value with no per-lane copy (the AxisComm counterpart
+        returns the reduced value replicated on every lane — the same
+        global object in both layouts)."""
+        return jax.lax.reduce(x, np.uint8(0), jax.lax.bitwise_xor,
+                              (lane_axis,))
 
     def lane_slice(self, x, lane: int, lane_axis: int = 0):
         """Host-side extraction of one lane's slice of a batched array.

@@ -252,23 +252,11 @@ def rebuild_block_row_through_panel(
     return jnp.concatenate([rows[:, :col0], window], axis=1)
 
 
-def xor_buddy(lane: int, level: int) -> int:
-    """The XOR butterfly partner of ``lane`` at ``level`` — the single
-    source every per-level artifact can be refetched from, and the
-    designated adopter (level 0) when a SHRINK world re-owns a dead
-    lane's rows (``repro.ft.elastic``)."""
-    return lane ^ (1 << level)
-
-
-def pairing_table(P: int):
-    """The full ladder pairing of a ``P``-lane world: one ppermute
-    permutation per butterfly level. An elastic transition never remaps
-    pairs explicitly — it re-enters this table at the new world size, so
-    the P−1-lane (padded-pow2) world's ladder is just ``pairing_table``
-    of the new slot count. DESIGN.md §11 sketches why that is sufficient:
-    the pairing is a pure function of (slot count, level), carrying no
-    state from the old world."""
-    return [_xor_perm(P, s) for s in range(_levels(P))]
+# The XOR pairing moved to the coding seam (repro.ft.coding): XORPairScheme
+# is the f=1 instance of the generalized redundancy, and xor_buddy /
+# pairing_table are its pairing algebra. Re-exported here for the existing
+# import sites (tests, elastic docs); the definitions are identical.
+from repro.ft.coding import pairing_table, xor_buddy  # noqa: E402,F401
 
 
 def tsqr_recover_r(factors: DistTSQRFactors, failed: int, source: int) -> jax.Array:

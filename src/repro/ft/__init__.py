@@ -34,9 +34,13 @@ from repro.ft import online
 from repro.ft.online import detect, orchestrator  # noqa: F401  (wires submodules)
 from repro.ft.online.orchestrator import SweepOrchestrator, ft_caqr_sweep_online
 from repro.ft.online.state import SweepState, initial_sweep_state, sweep_step
+from repro.ft import coding
+from repro.ft.coding import CodingScheme, MDSScheme, XORPairScheme
 __all__ = [
-    "driver", "elastic", "failures", "online", "semantics", "stragglers",
+    "coding", "driver", "elastic", "failures", "online", "semantics",
+    "stragglers",
     "Semantics",
+    "CodingScheme", "MDSScheme", "XORPairScheme",
     "FTSweepDriver", "FTSweepResult", "RecoveryEvent", "ft_caqr_sweep",
     "FailureSchedule", "UnrecoverableFailure", "iter_sweep_points",
     "next_sweep_point", "prev_sweep_point", "sweep_point",

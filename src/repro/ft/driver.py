@@ -89,6 +89,10 @@ from repro.core.comm import SimComm
 from repro.core.householder import apply_qt
 from repro.core.trailing import RecoveryBundle
 from repro.core.tsqr import _levels
+# NOTE: core.recovery re-exports from ft.coding, so by the time the line
+# above ran, repro.ft.coding is already in sys.modules — this import is a
+# cheap bind, not a cycle.
+from repro.ft.coding import CodingScheme, XORPairScheme
 from repro.ft.semantics import Semantics
 from repro.ft.failures import (
     Detector,
@@ -158,6 +162,9 @@ def obliterate_state(comm, state: SweepState, lane: int) -> SweepState:
         state, axes)
 
 
+_XOR_SCHEME = XORPairScheme()
+
+
 def recover_lanes(
     comm,
     state: SweepState,
@@ -166,13 +173,21 @@ def recover_lanes(
     dead: AbstractSet[int],
     sync=None,
     on_recovered=None,
+    scheme: Optional[CodingScheme] = None,
 ) -> Tuple[SweepState, List[RecoveryEvent]]:
     """The shared REBUILD protocol: all detected deaths strike first
     (normalize whatever was observed to the full mask-death), then recovery
-    runs one lane at a time. Both execution modes — the scheduled driver's
-    checkpoint and the online orchestrator's detection handler — call
-    exactly this, so the scheduled-vs-online bitwise equivalence cannot
-    drift apart in one copy.
+    runs. Both execution modes — the scheduled driver's checkpoint and the
+    online orchestrator's detection handler — call exactly this, so the
+    scheduled-vs-online bitwise equivalence cannot drift apart in one copy.
+
+    ``scheme`` (``repro.ft.coding``, default the paper's ``XORPairScheme``)
+    selects the redundancy: a SINGLE newly-dead lane always takes the
+    paper's single-source XOR REBUILD below (so ``MDSScheme(f=1)`` is
+    ledger-identical to XOR); ``2 <= t <= scheme.f`` simultaneous deaths
+    take the joint GF decode (``scheme.decode_lanes``, multi-source
+    ledger); ``t > scheme.f`` falls back to the per-lane XOR loop, whose
+    exhaustion is the honest ``UnrecoverableFailure`` boundary.
 
     ``sync(state)`` (optional) drains async dispatch before/after each
     rebuild so ``elapsed_s`` covers only the REBUILD itself;
@@ -180,22 +195,49 @@ def recover_lanes(
     its event is logged — the callers revive their detectors here (which
     also removes the lane from a live ``dead`` set, keeping later rebuilds'
     single-source checks honest)."""
+    scheme = _XOR_SCHEME if scheme is None else scheme
     events: List[RecoveryEvent] = []
+    newly = sorted(newly)
     for lane in newly:
         state = obliterate_state(comm, state, lane)
-    for lane in newly:
+    if (scheme.joint and 2 <= len(newly) <= scheme.f
+            and not (set(dead) - set(newly))):
         if sync is not None:
             sync(state)
         t0 = time.perf_counter()
-        state, reads = rebuild_state(comm, state, lane, point, dead)
+        state, reads = scheme.decode_lanes(comm, state, newly, dead)
         if sync is not None:
             sync(state)
-        if on_recovered is not None:
-            on_recovered(lane)
-        events.append(RecoveryEvent(
-            point=point, lane=lane, reads=reads,
-            elapsed_s=time.perf_counter() - t0,
-        ))
+        elapsed = time.perf_counter() - t0
+        for lane in newly:
+            if on_recovered is not None:
+                on_recovered(lane)
+            events.append(RecoveryEvent(
+                point=point, lane=lane, reads=dict(reads),
+                elapsed_s=elapsed,
+            ))
+        return state, events
+    try:
+        for lane in newly:
+            if sync is not None:
+                sync(state)
+            t0 = time.perf_counter()
+            state, reads = rebuild_state(comm, state, lane, point, dead)
+            if sync is not None:
+                sync(state)
+            if on_recovered is not None:
+                on_recovered(lane)
+            events.append(RecoveryEvent(
+                point=point, lane=lane, reads=reads,
+                elapsed_s=time.perf_counter() - t0,
+            ))
+    except UnrecoverableFailure as e:
+        if scheme.joint and len(newly) > scheme.f:
+            raise UnrecoverableFailure(
+                f"{len(newly)} simultaneous deaths exceed the coding "
+                f"scheme's tolerance f={scheme.f}, and the XOR fallback "
+                f"found no live source: {e}") from None
+        raise
     return state, events
 
 
@@ -435,8 +477,10 @@ class FTSweepDriver:
         panel_width: int,
         schedule: Optional[FailureSchedule] = None,
         detector: Optional[Detector] = None,
+        scheme: Optional[CodingScheme] = None,
     ):
         self.comm = comm
+        self.scheme = _XOR_SCHEME if scheme is None else scheme
         self.P = comm.axis_size()
         # SimComm runs eagerly (lane kills between real dispatches, timed
         # REBUILDs); AxisComm traces the whole sweep into one program, so
@@ -456,6 +500,10 @@ class FTSweepDriver:
         while self.state.cursor is not None:
             point = self.state.cursor
             self.state = sweep_step(self.comm, self.state)
+            # re-encode the parity slots from live state BEFORE the just-
+            # completed point's deaths fire: a boundary decode must see
+            # survivors exactly as encoded (identity under XOR pairing)
+            self.state = self.scheme.refresh(self.comm, self.state)
             self._checkpoint(point)
         R, factors, bundles = finalize(self.comm, self.state)
         return FTSweepResult(R=R, factors=factors, bundles=bundles,
@@ -473,6 +521,7 @@ class FTSweepDriver:
         self.state, events = recover_lanes(
             self.comm, self.state, newly, point, self.detector.dead,
             sync=sync, on_recovered=self.detector.revive,
+            scheme=self.scheme,
         )
         self.events.extend(events)
 
@@ -487,6 +536,7 @@ def ft_caqr_sweep(
     panel_width: int,
     schedule: Optional[FailureSchedule] = None,
     semantics: Optional["Semantics"] = None,
+    scheme: Optional[CodingScheme] = None,
 ) -> FTSweepResult:
     """Run the full windowed FT-CAQR sweep under a failure schedule
     (paper §II-III end to end).
@@ -500,6 +550,12 @@ def ft_caqr_sweep(
     (default) runs this driver; SHRINK/BLANK delegate to the scheduled
     elastic driver (``repro.ft.elastic.ft_caqr_sweep_elastic``), which
     returns an ``ElasticSweepResult`` with a host-spliced R instead.
+
+    ``scheme`` selects the redundancy coding (``repro.ft.coding``):
+    ``XORPairScheme`` (default — the paper's pairwise XOR, one death per
+    pair) or ``MDSScheme(f=...)``, whose coded checksum slots recover ANY
+    ``f`` simultaneous deaths — including a whole former XOR buddy pair —
+    still bitwise-identical to the failure-free sweep.
 
     ``comm`` selects the execution: ``SimComm(P)`` for the single-device
     simulator, ``AxisComm(axis)`` inside ``shard_map`` for the production
@@ -530,5 +586,7 @@ def ft_caqr_sweep(
         from repro.ft.elastic import ft_caqr_sweep_elastic
 
         return ft_caqr_sweep_elastic(
-            A0, comm, panel_width, schedule=schedule, semantics=semantics)
-    return FTSweepDriver(A0, comm, panel_width, schedule).run()
+            A0, comm, panel_width, schedule=schedule, semantics=semantics,
+            scheme=scheme)
+    return FTSweepDriver(A0, comm, panel_width, schedule,
+                         scheme=scheme).run()

@@ -416,6 +416,7 @@ def ft_caqr_sweep_elastic(
     semantics: Semantics = Semantics.SHRINK,
     policy: str = "pad",
     grow_at=None,
+    scheme=None,
 ) -> ElasticSweepResult:
     """Scheduled (trace-time) elastic sweep: kills fire at scheduled
     sweep points, each is healed from its buddies (the same
@@ -431,11 +432,13 @@ def ft_caqr_sweep_elastic(
     matching how an online ``ScriptedKiller`` sees boundaries.
     """
     from repro.core.comm import SimComm
+    from repro.ft.coding import XORPairScheme
     from repro.ft.driver import recover_lanes
     from repro.ft.failures import Detector
     from repro.ft.online.state import initial_sweep_state, sweep_step
 
     assert isinstance(comm, SimComm), "the scheduled oracle runs on SimComm"
+    scheme = XORPairScheme() if scheme is None else scheme
     state = initial_sweep_state(comm, A0, panel_width)
     ctrl = ElasticController(semantics, state.geom, policy=policy)
     detector = Detector(comm.axis_size(), schedule)
@@ -444,11 +447,15 @@ def ft_caqr_sweep_elastic(
         while state.cursor is not None:
             point = state.cursor
             state = sweep_step(comm, state)
+            # re-encode the parity slots before this point's kills fire;
+            # after a transition the generator re-derives at the new world
+            # size (the MDS analogue of the XOR pairing remap)
+            state = scheme.refresh(comm, state)
             newly = detector.begin_step(point)
             if newly:
                 state, evs = recover_lanes(
                     comm, state, newly, point, detector.dead,
-                    on_recovered=detector.revive)
+                    on_recovered=detector.revive, scheme=scheme)
                 events.extend(evs)
                 ctrl.note_deaths(newly)
             if point == grow_at:

@@ -224,16 +224,17 @@ class WallClockKiller:
     (``examples/online_recovery.py``). Records where it struck in
     ``.struck_at``."""
 
-    def __init__(self, after_s: float, lane: int):
+    def __init__(self, after_s: float, lane: int, clock=time.monotonic):
         self.after_s = after_s
         self.lane = lane
+        self.clock = clock  # injectable for deterministic tests (fake clock)
         self._t0: Optional[float] = None
         self.struck_at: Optional[Tuple[int, str, int]] = None
 
     def __call__(self, comm, state: SweepState) -> SweepState:
         from repro.ft.driver import obliterate_state
 
-        now = time.monotonic()
+        now = self.clock()
         if self._t0 is None:
             self._t0 = now
         if self.struck_at is None and now - self._t0 >= self.after_s \

@@ -48,6 +48,7 @@ import jax
 import numpy as np
 
 from repro.core.comm import SimComm
+from repro.ft.coding import CodingScheme, XORPairScheme
 from repro.ft.driver import (
     FTSweepResult,
     RecoveryEvent,
@@ -205,6 +206,7 @@ class SweepOrchestrator:
         grow_at=None,
         straggler_monitor: Optional[StragglerMonitor] = None,
         lane_clock: Optional[Callable] = None,
+        scheme: Optional[CodingScheme] = None,
     ):
         assert comm is not None, "comm is required"
         self.comm = comm
@@ -243,6 +245,7 @@ class SweepOrchestrator:
                 semantics, self.state.geom, policy=elastic_policy)
         self.straggler_monitor = straggler_monitor
         self.lane_clock = lane_clock
+        self.scheme = XORPairScheme() if scheme is None else scheme
         self.speculations: List[SpeculationEvent] = []
         self._spec_counts: Dict[int, int] = {}
         self.events: List[RecoveryEvent] = []
@@ -313,6 +316,10 @@ class SweepOrchestrator:
                 self.state = self._segment(self.state)
                 self.segments_run += 1
             boundary += 1
+            # re-encode the parity slots from the (all-live) boundary state
+            # BEFORE the fault hooks / detector can observe deaths for this
+            # boundary: the decode must see survivors exactly as encoded
+            self.state = self.scheme.refresh(self.comm, self.state)
             # the just-completed point = the recoverable boundary any death
             # discovered now is attributed to
             point = prev_sweep_point(self.state.cursor, geom.n_panels, levels)
@@ -423,7 +430,8 @@ class SweepOrchestrator:
             np.array_equal(
                 np.asarray(self.comm.lane_slice(a, lane, ax)),
                 np.asarray(self.comm.lane_slice(b, lane, ax)))
-            for a, b, ax in zip(flat_own, flat_spec, flat_ax))
+            for a, b, ax in zip(flat_own, flat_spec, flat_ax)
+            if ax >= 0)  # ax < 0: no lane axis (checksum-lane parity slots)
         self.state = spec  # first result wins (bitwise-equal when matched)
         self.speculations.append(SpeculationEvent(
             point=tuple(point), lane=lane, matched=matched, reads=reads))
@@ -476,6 +484,7 @@ class SweepOrchestrator:
             sync=lambda s: jax.block_until_ready(
                 jax.tree_util.tree_leaves(s)),
             on_recovered=on_recovered,
+            scheme=self.scheme,
         )
         self.recover_s += sum(e.elapsed_s for e in events)
         self.events.extend(events)

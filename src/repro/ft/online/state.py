@@ -90,7 +90,14 @@ _ARRAY_FIELDS = (
     "Y2s", "Ts", "level_Y2", "level_T",
     "C_local", "C_prime", "Ws", "Cs_self", "Cs_buddy", "tops",
     "factors", "R_rows", "bundles",
+    "code",
 )
+
+# Fields excluded from the host wire format (kept at version 1): the coded
+# parity slots are derivable state — a resumed sweep re-encodes them at its
+# first boundary (`CodingScheme.refresh`), so persisting them would only
+# grow checkpoints and fork the format.
+_EPHEMERAL_FIELDS = ("code",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +140,13 @@ class SweepState:
     factors: Tuple = ()      # PanelFactors
     R_rows: Tuple = ()
     bundles: Tuple = ()      # RecoveryBundle
+    # coded checksum slots (repro.ft.coding): one (f, *byte_shape) uint8
+    # parity per protected leaf, re-encoded at every boundary by the
+    # scheme's refresh; None under the plain XOR scheme. No lane axis —
+    # the parity slots model dedicated checksum lanes outside the compute
+    # failure domain (skip-axis -1 in state_lane_axes; never poisoned,
+    # never serialized).
+    code: Any = None
 
     @property
     def levels(self) -> int:
@@ -442,6 +456,10 @@ def state_lane_axes(state: SweepState) -> SweepState:
         axes[f] = like(f, 1)
     axes["factors"] = tuple(_FACTORS_AXES for _ in state.factors)
     axes["bundles"] = tuple(_BUNDLE_AXES for _ in state.bundles)
+    # parity slots have NO lane axis (checksum lanes live outside the
+    # compute failure domain): the -1 sentinel skips them in death
+    # masking, NaN scans, and the SPMD specs (replicated)
+    axes["code"] = like("code", -1)
     return SweepState(geom=state.geom, cursor=state.cursor, **axes)
 
 
@@ -451,6 +469,8 @@ def state_lane_axes(state: SweepState) -> SweepState:
 def _flat_arrays(state: SweepState) -> Dict[str, Any]:
     flat: Dict[str, Any] = {}
     for f in _ARRAY_FIELDS:
+        if f in _EPHEMERAL_FIELDS:
+            continue
         v = getattr(state, f)
         if v is None:
             continue
@@ -477,12 +497,14 @@ def sweep_state_to_host(state: SweepState) -> Dict[str, np.ndarray]:
         "cursor": list(state.cursor) if state.cursor is not None else None,
         "none_fields": [
             f for f in _ARRAY_FIELDS
-            if not isinstance(getattr(state, f), tuple)
+            if f not in _EPHEMERAL_FIELDS
+            and not isinstance(getattr(state, f), tuple)
             and getattr(state, f) is None
         ],
         "tuple_lens": {
             f: len(getattr(state, f)) for f in _ARRAY_FIELDS
-            if isinstance(getattr(state, f), tuple)
+            if f not in _EPHEMERAL_FIELDS
+            and isinstance(getattr(state, f), tuple)
         },
     }
     arrays["__meta__"] = np.asarray(json.dumps(meta))
@@ -505,7 +527,9 @@ def sweep_state_from_host(arrays: Dict[str, np.ndarray],
 
     fields: Dict[str, Any] = {}
     for f in _ARRAY_FIELDS:
-        if f in meta["none_fields"]:
+        if f in _EPHEMERAL_FIELDS:
+            fields[f] = None  # parity slots re-encode at the first boundary
+        elif f in meta["none_fields"]:
             fields[f] = None
         elif f in meta["tuple_lens"]:
             n = meta["tuple_lens"][f]

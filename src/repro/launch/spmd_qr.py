@@ -80,6 +80,7 @@ def ft_caqr_sweep_spmd(
     schedule: Optional[FailureSchedule] = None,
     mesh=None,
     axis_name: str = "qr",
+    scheme=None,
 ) -> FTSweepResult:
     """Run the windowed FT-CAQR sweep under ``shard_map`` on a device mesh.
 
@@ -110,7 +111,8 @@ def ft_caqr_sweep_spmd(
     events_log = []
 
     def body(A_local):
-        drv = FTSweepDriver(A_local, AxisComm(axis_name), panel_width, schedule)
+        drv = FTSweepDriver(A_local, AxisComm(axis_name), panel_width, schedule,
+                            scheme=scheme)
         res = drv.run()
         events_log.append(res.events)
         factors = jax.tree_util.tree_map(
@@ -163,6 +165,10 @@ def make_spmd_sweep_step(mesh=None, axis_name: str = "qr"):
     cache = {}
 
     def spec_of(lane_axis):
+        if lane_axis < 0:
+            # no lane axis: checksum-lane parity slots (repro.ft.coding)
+            # are global values, replicated across the mesh
+            return P()
         return P(*([None] * lane_axis + [axis_name]))
 
     def step(state):
@@ -176,10 +182,12 @@ def make_spmd_sweep_step(mesh=None, axis_name: str = "qr"):
 
             def body(s_shard):
                 local = jax.tree_util.tree_map(
-                    lambda x, ax: jnp.squeeze(x, axis=ax), s_shard, in_axes)
+                    lambda x, ax: x if ax < 0 else jnp.squeeze(x, axis=ax),
+                    s_shard, in_axes)
                 out = sweep_step(AxisComm(axis_name), local)
                 return jax.tree_util.tree_map(
-                    lambda x, ax: jnp.expand_dims(x, ax), out, out_axes)
+                    lambda x, ax: x if ax < 0 else jnp.expand_dims(x, ax),
+                    out, out_axes)
 
             fn = jax.jit(compat.shard_map(
                 body, mesh,

@@ -9,6 +9,29 @@ def rng():
     return np.random.default_rng(0)
 
 
+class FakeClock:
+    """Deterministic monotonic clock: each call advances by ``tick``
+    seconds. Inject into any ``clock=`` seam (``WallClockKiller``) so
+    wall-clock-driven tests strike at a schedule-deterministic boundary
+    regardless of host load."""
+
+    def __init__(self, tick=1.0, start=0.0):
+        self.tick = tick
+        self.now = start
+        self.calls = 0
+
+    def __call__(self):
+        t = self.now
+        self.now += self.tick
+        self.calls += 1
+        return t
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
+
 def signfix(R):
     import numpy as np
     s = np.sign(np.diag(R))

@@ -314,14 +314,18 @@ def test_abort_semantics_raises(ragged_reference):
             fault_hooks=[ScriptedKiller({point: [1]})])
 
 
-def test_wall_clock_killer(ragged_reference):
+def test_wall_clock_killer(ragged_reference, fake_clock):
     """The unscripted demo path: the kill position is chosen by the clock;
-    wherever it lands, the finished factorization is bit-identical."""
+    wherever it lands, the finished factorization is bit-identical. The
+    injected fake clock (1s per boundary) makes the strike position
+    deterministic — no dependence on host load."""
     A, ref = ragged_reference
-    killer = WallClockKiller(after_s=0.0, lane=2)  # strike at first boundary
+    killer = WallClockKiller(after_s=3.0, lane=2, clock=fake_clock)
     got = ft_caqr_sweep_online(A, SimComm(RP), RB, fault_hooks=[killer])
     _assert_bit_identical(got, ref)
-    assert killer.struck_at is not None
+    # clock reads 0,1,2,3,... at consecutive boundaries: strike lands
+    # exactly when 3.0s have "elapsed" — the 4th boundary, point index 3
+    assert killer.struck_at == R_POINTS[3]
     assert [(e.point, e.lane) for e in got.events] == [(killer.struck_at, 2)]
 
 

@@ -1,0 +1,241 @@
+"""The QR-powered optimizer layer (``repro.optim.caqr_muon`` /
+``repro.optim.powersgd``) against numpy references.
+
+Both modules route their orthonormalization through the paper's TSQR
+(``tsqr_orthonormalize``), so these are consumer-level gates on the same
+primitive the FT sweep factors with: CAQR-Muon's orthogonalized momentum
+must satisfy the exact delta^T delta = lr^2 * scale^2 * I invariant (a
+sign-robust statement of "the update is orthonormal", avoiding QR's
+column-sign ambiguity), and PowerSGD's rank-r compression must be EXACT
+on a gradient that is already rank r, with the error-feedback identity
+G_hat + new_error == G + error holding to float tolerance in general.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim.adamw import Optimizer
+from repro.optim.caqr_muon import MuonState, _orth, _orth2d, caqr_muon
+from repro.optim.powersgd import (
+    PowerSGDState,
+    compress_reduce,
+    compress_tree,
+    init_state,
+)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# -- the orthonormalizer ------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(512, 16), (256, 64), (64, 64)],
+                         ids=lambda s: f"{s[0]}x{s[1]}")
+def test_orth2d_tall_is_orthonormal_basis(shape):
+    """Tall/square input: Q has orthonormal columns spanning the input's
+    column space (Q Q^T M == M up to float tolerance)."""
+    m, n = shape
+    M = jnp.asarray(_rng(1).standard_normal((m, n)), jnp.float32)
+    Q = np.asarray(_orth2d(M))
+    assert Q.shape == (m, n)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(n), atol=1e-4)
+    np.testing.assert_allclose(Q @ (Q.T @ np.asarray(M)), np.asarray(M),
+                               atol=5e-3)
+
+
+def test_orth2d_wide_transposes():
+    """Wide input orthonormalizes the transpose: rows are orthonormal."""
+    M = jnp.asarray(_rng(2).standard_normal((16, 512)), jnp.float32)
+    Q = np.asarray(_orth2d(M))
+    assert Q.shape == (16, 512)
+    np.testing.assert_allclose(Q @ Q.T, np.eye(16), atol=1e-4)
+
+
+def test_orth_stacked_matches_per_slice():
+    """A stacked (G, D, F) bank orthogonalizes per slice via vmap —
+    identical to calling the 2-D path on each slice."""
+    M = jnp.asarray(_rng(3).standard_normal((3, 128, 32)), jnp.float32)
+    got = np.asarray(_orth(M))
+    for g in range(3):
+        np.testing.assert_array_equal(got[g], np.asarray(_orth2d(M[g])))
+
+
+# -- CAQR-Muon ----------------------------------------------------------------
+
+
+def _toy_params():
+    r = _rng(4)
+    return {
+        "dense": jnp.asarray(r.standard_normal((128, 32)), jnp.float32),
+        "embed": jnp.asarray(r.standard_normal((64, 16)), jnp.float32),
+        "bias": jnp.asarray(r.standard_normal((32,)), jnp.float32),
+    }
+
+
+def test_caqr_muon_is_optimizer_and_inits_zero():
+    opt = caqr_muon()
+    assert isinstance(opt, Optimizer)
+    params = _toy_params()
+    state = opt.init(params)
+    assert isinstance(state, MuonState)
+    assert int(state.step) == 0
+    assert all(not np.asarray(m).any()
+               for m in jax.tree_util.tree_leaves(state.mom))
+
+
+def test_caqr_muon_update_is_orthonormal_scaled():
+    """The muon invariant: for a 2-D non-excluded param the update delta
+    satisfies delta^T delta == lr^2 * scale^2 * I exactly up to float
+    tolerance (scale = sqrt(max(1, m/n))), no matter the gradient —
+    sign-robust, unlike comparing Q against a reference QR."""
+    opt = caqr_muon(weight_decay=0.0)
+    params = _toy_params()
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(_rng(5).standard_normal(p.shape), jnp.float32),
+        params)
+    lr = 0.01
+    updates, state = opt.update(grads, state, params, lr)
+    d = np.asarray(updates["dense"], np.float64)
+    m, n = d.shape
+    scale2 = max(1.0, m / n)
+    np.testing.assert_allclose(d.T @ d, lr * lr * scale2 * np.eye(n),
+                               atol=1e-8)
+    assert int(state.step) == 1
+
+
+def test_caqr_muon_excluded_params_take_adam_path():
+    """'embed'-matching and 1-D params fall back to Adam scaling: on the
+    first step the update is -lr * adam_scale * sign-ish(g) — verified
+    against the closed-form numpy reference."""
+    b1, b2, eps, ascale = 0.95, 0.95, 1e-8, 0.3
+    opt = caqr_muon(b1=b1, adam_b2=b2, eps=eps, adam_scale=ascale)
+    params = _toy_params()
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(_rng(6).standard_normal(p.shape), jnp.float32),
+        params)
+    lr = 0.01
+    updates, _ = opt.update(grads, state, params, lr)
+    for name in ("embed", "bias"):
+        g = np.asarray(grads[name], np.float64)
+        # step 1 closed form: m_hat = g, v_hat = g^2 (bias correction
+        # cancels the (1-b) factors exactly)
+        ref = -lr * ascale * g / (np.abs(g) + eps)
+        np.testing.assert_allclose(np.asarray(updates[name]), ref, atol=1e-6)
+
+
+def test_caqr_muon_momentum_accumulates():
+    """Two identical gradient steps: muon momentum is a plain sum
+    (m <- b1*m + g), adam momentum an EMA — both against numpy."""
+    b1 = 0.9
+    opt = caqr_muon(b1=b1)
+    params = _toy_params()
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(_rng(7).standard_normal(p.shape), jnp.float32),
+        params)
+    _, s1 = opt.update(grads, state, params, 0.01)
+    _, s2 = opt.update(grads, s1, params, 0.01)
+    g_dense = np.asarray(grads["dense"], np.float64)
+    np.testing.assert_allclose(np.asarray(s2.mom["dense"]),
+                               (1 + b1) * g_dense, rtol=1e-5)
+    g_bias = np.asarray(grads["bias"], np.float64)
+    np.testing.assert_allclose(np.asarray(s2.mom["bias"]),
+                               (1 - b1) * (1 + b1) * g_bias, rtol=1e-5)
+
+
+# -- PowerSGD-QR --------------------------------------------------------------
+
+
+def test_powersgd_exact_on_low_rank():
+    """A gradient that IS rank r reconstructs exactly (to float
+    tolerance): G = U V^T with U (m, r), V (n, r) and a sketch of rank r
+    — compress_reduce returns G_hat == G and a ~zero error buffer."""
+    m, n, r = 256, 64, 4
+    rng = _rng(8)
+    U = rng.standard_normal((m, r)).astype(np.float32)
+    V = rng.standard_normal((n, r)).astype(np.float32)
+    G = jnp.asarray(U @ V.T)
+    omega = jnp.asarray(rng.standard_normal((n, r)).astype(np.float32))
+    err0 = jnp.zeros((m, n), jnp.float32)
+    G_hat, new_err, sketch = compress_reduce(G, omega, err0, axis_name=None)
+    np.testing.assert_allclose(np.asarray(G_hat), np.asarray(G),
+                               rtol=1e-3, atol=1e-3)
+    assert np.max(np.abs(np.asarray(new_err))) < 1e-2
+    assert sketch.shape == (n, r)
+
+
+def test_powersgd_error_feedback_identity():
+    """In general G_hat + new_error == G + error (nothing is lost, the
+    residual is carried): the identity the compression's convergence
+    argument rests on."""
+    m, n, r = 128, 32, 4
+    rng = _rng(9)
+    G = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    err = jnp.asarray(0.1 * rng.standard_normal((m, n)).astype(np.float32))
+    omega = jnp.asarray(rng.standard_normal((n, r)).astype(np.float32))
+    G_hat, new_err, _ = compress_reduce(G, omega, err, axis_name=None)
+    np.testing.assert_allclose(
+        np.asarray(G_hat, np.float64) + np.asarray(new_err, np.float64),
+        np.asarray(G, np.float64) + np.asarray(err, np.float64),
+        atol=1e-5)
+
+
+def test_powersgd_warm_start_converges_to_top_subspace():
+    """Power iteration: re-feeding the returned sketch sharpens the
+    rank-r filter — after a few rounds the captured energy approaches
+    the optimal rank-r (SVD) energy."""
+    m, n, r = 256, 64, 4
+    rng = _rng(10)
+    # spectrum with a clear top-r subspace
+    U, _ = np.linalg.qr(rng.standard_normal((m, m)))
+    V, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.array([10, 8, 6, 5] + [0.1] * (n - 4))
+    G = jnp.asarray((U[:, :n] * s) @ V.T, jnp.float32)
+    omega = jnp.asarray(rng.standard_normal((n, r)).astype(np.float32))
+    err = jnp.zeros((m, n), jnp.float32)
+    for _ in range(4):
+        G_hat, _, sketch = compress_reduce(G, omega, err, axis_name=None)
+        omega = sketch
+    opt_energy = float(np.sum(s[:r] ** 2))
+    got_energy = float(np.sum(np.asarray(G_hat, np.float64) ** 2))
+    assert got_energy > 0.98 * opt_energy
+
+
+def test_powersgd_init_and_tree_structure():
+    """init_state/compress_tree: large 2-D leaves get real buffers and are
+    compressed; small/1-D leaves pass through with size-0 placeholders and
+    (with axis_name=None) come back unchanged."""
+    params = {
+        "big": jnp.zeros((128, 64), jnp.float32),      # 8192 >= 4096
+        "small": jnp.zeros((8, 8), jnp.float32),
+        "vec": jnp.zeros((100,), jnp.float32),
+    }
+    state = init_state(jax.random.PRNGKey(0), params, rank=4)
+    assert isinstance(state, PowerSGDState)
+    assert state.error["big"].shape == (128, 64)
+    assert state.sketch["big"].shape == (64, 4)
+    assert state.error["small"].shape == (0,)
+    assert state.sketch["vec"].shape == (0,)
+
+    rng = _rng(11)
+    grads = {
+        "big": jnp.asarray(rng.standard_normal((128, 64)), jnp.float32),
+        "small": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+        "vec": jnp.asarray(rng.standard_normal((100,)), jnp.float32),
+    }
+    reduced, new_state = compress_tree(grads, state, axis_name=None, rank=4)
+    np.testing.assert_array_equal(np.asarray(reduced["small"]),
+                                  np.asarray(grads["small"]))
+    np.testing.assert_array_equal(np.asarray(reduced["vec"]),
+                                  np.asarray(grads["vec"]))
+    assert reduced["big"].shape == (128, 64)
+    # the compressed leaf obeys error feedback: G_hat + E_new == G
+    np.testing.assert_allclose(
+        np.asarray(reduced["big"], np.float64)
+        + np.asarray(new_state.error["big"], np.float64),
+        np.asarray(grads["big"], np.float64), atol=1e-5)

@@ -29,6 +29,7 @@ REQUIRED_HEADINGS = {
         "## Shape support",
         "## Execution model: one program, two paths",
         "### Semantics support",
+        "### Coded redundancy: the `f` knob",
         "## Serving: QR-as-a-service",
     ],
     "DESIGN.md": [
@@ -39,6 +40,7 @@ REQUIRED_HEADINGS = {
         "## 10. Kernel fast path",
         "## 11. Elastic execution",
         "## 12. Serving: QR-as-a-service",
+        "## 13. Coded redundancy",
     ],
 }
 

@@ -78,6 +78,38 @@ echo "== serve smoke (QR-as-a-service traffic burst + mid-batch lane =="
 echo "== kill; every retired R verified against numpy QR/lstsq) =="
 python -m repro.launch.serve_qr --requests 8 --kill-lane 2 --kill-tick 2
 
+echo "== multi-failure smoke (coded checksum lanes: a former XOR-buddy =="
+echo "== pair killed simultaneously at runtime, healed by the joint GF =="
+echo "== decode under MDSScheme(f=2), checked bitwise vs failure-free; =="
+echo "== the same schedule must still raise under the XOR scheme) =="
+python - <<'PYEOF'
+import numpy as np, jax
+from repro.core import SimComm
+from repro.ft import (MDSScheme, UnrecoverableFailure, ft_caqr_sweep,
+                      ft_caqr_sweep_online, sweep_point)
+from repro.ft.online.detect import ScriptedKiller
+
+P, m_loc, n, b = 4, 6, 10, 4
+A = np.random.default_rng(3).standard_normal((P, m_loc, n)).astype(np.float32)
+comm = SimComm(P)
+pt = sweep_point(1, "trailing", 0)
+free = ft_caqr_sweep(A, comm, b)
+try:
+    ft_caqr_sweep_online(A, comm, b,
+                         fault_hooks=[ScriptedKiller({pt: [2, 3]})])
+    raise SystemExit("XOR scheme recovered a buddy-pair double kill?!")
+except UnrecoverableFailure:
+    pass
+got = ft_caqr_sweep_online(A, comm, b,
+                           fault_hooks=[ScriptedKiller({pt: [2, 3]})],
+                           scheme=MDSScheme(f=2))
+for g, r in zip(jax.tree_util.tree_leaves((got.R, got.factors, got.bundles)),
+                jax.tree_util.tree_leaves((free.R, free.factors, free.bundles))):
+    assert np.array_equal(np.asarray(g), np.asarray(r)), "decode not bitwise"
+assert all("coded.parity0" in e.reads for e in got.events)
+print("multi-failure smoke OK: buddy-pair kill decoded bitwise, f=2")
+PYEOF
+
 echo "== repro.ft API doctest examples =="
 python -m doctest src/repro/ft/driver.py src/repro/ft/failures.py \
     src/repro/ft/semantics.py && echo "doctests OK"
@@ -87,10 +119,12 @@ echo "== cache round-trip; CI_REQUIRE_COMPILED_KERNELS=1 to demand Pallas) =="
 python tools/kernel_smoke.py
 
 echo "== benchmark smoke (writes BENCH_core.json; fails loudly if the =="
-echo "== online stepped overhead, the elastic SHRINK continuation, or =="
-echo "== the serve continuous-batching overhead regresses >25% over the =="
-echo "== recorded baseline; escapes: CI_ALLOW_ONLINE_REGRESSION=1 / =="
-echo "== CI_ALLOW_ELASTIC_REGRESSION=1 / CI_ALLOW_SERVE_REGRESSION=1) =="
+echo "== online stepped overhead, the elastic SHRINK continuation, the =="
+echo "== serve continuous-batching overhead, or the coded-lane f=2 =="
+echo "== encode overhead regresses >25% over the recorded baseline; =="
+echo "== escapes: CI_ALLOW_ONLINE_REGRESSION=1 / =="
+echo "== CI_ALLOW_ELASTIC_REGRESSION=1 / CI_ALLOW_SERVE_REGRESSION=1 / =="
+echo "== CI_ALLOW_CODING_REGRESSION=1) =="
 python -m benchmarks.run --quick
 
 echo "CI OK"
