@@ -163,6 +163,23 @@ def main() -> None:
           f"buddy-pair joint decode {dec['us_detect_to_recovered']:.0f}us "
           f"({dec['reads']} reads)")
 
+    from benchmarks import bench_train
+
+    train = bench_train.suite(quick=args.quick)
+    bd, pl, stp = train["boundary"], train["poll"], train["step"]
+    print()
+    print("# train path: optimizer-internal FT-QR inside the training step")
+    print(f"# boundary ({bd['config']['boundaries']} per sweep): "
+          f"sync {bd['us_sync_per_boundary']:.0f}us, "
+          f"async {bd['us_async_per_boundary']:.0f}us "
+          f"({bd['async_vs_sync']:.2f}x); poll: eager "
+          f"{pl['us_poll_eager']:.0f}us, probe {pl['us_poll_probe']:.0f}us "
+          f"({pl['probe_vs_poll']:.2f}x)")
+    print(f"# step: free {stp['us_step_free']/1e3:.0f}ms, killed "
+          f"{stp['us_step_killed']/1e3:.0f}ms "
+          f"(REBUILD adds {stp['us_rebuild_delta']/1e3:.0f}ms, "
+          f"{stp['kill_vs_free']:.2f}x), bitwise-identical losses")
+
     # gate BEFORE recording: a regressed measurement must not become the
     # next run's baseline (the gate would otherwise fail exactly once),
     # and a passing one is recorded with the damped-baseline floor so a
@@ -174,6 +191,8 @@ def main() -> None:
         serve, baseline.get("serve"))
     coding_ok, coding_msg = bench_coding.check_regression(
         coding, baseline.get("coding"))
+    train_ok, train_msg = bench_train.check_regression(
+        train, baseline.get("train"))
     # kernels-beat-oracle gate: intra-run (compiled rows vs their oracles),
     # no baseline needed — but the verdict is recorded alongside the rows
     kernel_ok, kernel_msg = bench_core.check_kernel_regression(rows)
@@ -188,7 +207,9 @@ def main() -> None:
               "serve": bench_serve.baseline_to_record(
                   serve, baseline.get("serve")),
               "coding": bench_coding.baseline_to_record(
-                  coding, baseline.get("coding"))}
+                  coding, baseline.get("coding")),
+              "train": bench_train.baseline_to_record(
+                  train, baseline.get("train"))}
     if not ok:
         record["online"] = baseline.get("online")   # keep the old baseline
         record["online_rejected"] = online          # the failing numbers
@@ -201,6 +222,9 @@ def main() -> None:
     if not coding_ok:
         record["coding"] = baseline.get("coding")
         record["coding_rejected"] = coding
+    if not train_ok:
+        record["train"] = baseline.get("train")
+        record["train_rejected"] = train
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {args.out}")
@@ -208,9 +232,10 @@ def main() -> None:
     print(f"# elastic regression gate: {elastic_msg}")
     print(f"# serve regression gate: {serve_msg}")
     print(f"# coding regression gate: {coding_msg}")
+    print(f"# train regression gate: {train_msg}")
     print(f"# kernel gate: {kernel_msg}")
     if not ok or not kernel_ok or not elastic_ok or not serve_ok \
-            or not coding_ok:
+            or not coding_ok or not train_ok:
         raise SystemExit(2)
 
     if not args.quick:

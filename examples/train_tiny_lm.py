@@ -1,24 +1,81 @@
-"""End-to-end driver: train a ~1M-param llama-family model for a few hundred
-steps on the deterministic synthetic pipeline, with diskless checkpoints and
-the CAQR-Muon (TSQR-orthogonalized) optimizer.
+"""End-to-end driver: train a ~1M-param llama-family model on the
+deterministic synthetic pipeline under the FT training runtime
+(DESIGN.md §14) — the CAQR-Muon optimizer's orthogonalization sweeps run
+through the fault-tolerant QR engine, and a lane is killed INSIDE one of
+those optimizer-internal sweeps mid-run. The run heals in place via
+REBUILD and finishes with params and loss curve bitwise-identical to a
+failure-free reference, which this script asserts.
 
-Run: PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+Run: PYTHONPATH=src python examples/train_tiny_lm.py [--steps 12]
+     PYTHONPATH=src python examples/train_tiny_lm.py --plain   # legacy
+                                   # Trainer path: in-jit TSQR orth, no
+                                   # FT engine, no kill
 """
 import argparse
 
+import jax
+import numpy as np
+
 from repro.configs import get_smoke
 from repro.data.pipeline import DataConfig
+from repro.ft.semantics import Semantics
 from repro.train import TrainConfig, Trainer
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--steps", type=int, default=300)
-ap.add_argument("--optimizer", default="caqr_muon", choices=["adamw", "caqr_muon"])
+ap.add_argument("--steps", type=int, default=12)
+ap.add_argument("--optimizer", default="caqr_muon",
+                choices=["adamw", "caqr_muon"])
+ap.add_argument("--plain", action="store_true",
+                help="legacy Trainer path (optimizer-internal QR stays "
+                     "in-jit; no FT engine, no kill demo)")
+ap.add_argument("--kill-step", type=int, default=1,
+                help="training step whose optimizer sweep gets the kill")
+ap.add_argument("--kill-lane", type=int, default=2)
 args = ap.parse_args()
 
 cfg = get_smoke("tinyllama-1.1b")
 dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16, seed=0)
-tcfg = TrainConfig(steps=args.steps, lr=1e-2, warmup=20, n_lanes=4,
-                   diskless_every=10, log_every=25, optimizer=args.optimizer)
-trainer = Trainer(cfg, tcfg, dcfg)
-hist = trainer.run()
-print(f"\nfinal loss {hist[-1]['loss']:.4f} (start {hist[0]['loss']:.4f})")
+
+if args.plain:
+    tcfg = TrainConfig(steps=args.steps, lr=1e-2, warmup=20, n_lanes=4,
+                       diskless_every=10, log_every=25,
+                       optimizer=args.optimizer)
+    trainer = Trainer(cfg, tcfg, dcfg)
+    hist = trainer.run()
+    print(f"\nfinal loss {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f})")
+    raise SystemExit(0)
+
+from repro.train.ftrun import FTTrainer, StepSweepKiller  # noqa: E402
+
+tcfg = TrainConfig(steps=args.steps, lr=1e-2, warmup=4, n_lanes=4,
+                   diskless_every=5, log_every=5,
+                   semantics=Semantics.REBUILD, optimizer=args.optimizer)
+
+print("== failure-free reference ==")
+ref = FTTrainer(cfg, tcfg, dcfg)
+hist_ref = ref.run()
+
+print(f"\n== same run, lane {args.kill_lane} killed inside the "
+      f"optimizer-internal sweep of step {args.kill_step} ==")
+killer = StepSweepKiller(at_step=args.kill_step, lane=args.kill_lane)
+tr = FTTrainer(cfg, tcfg, dcfg, qr_fault_hooks=[killer])
+hist = tr.run()
+
+assert killer.fired, "the kill never landed inside an optimizer sweep"
+step, task, point = killer.struck
+print(f"\nkill struck step {step}, task {task}, sweep point {point}; "
+      f"REBUILD healed it in place")
+
+leaves = zip(jax.tree_util.tree_leaves(ref.state.params),
+             jax.tree_util.tree_leaves(tr.state.params))
+assert all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in leaves), \
+    "killed-run params differ from failure-free"
+assert [h["loss"] for h in hist_ref] == [h["loss"] for h in hist], \
+    "killed-run loss curve differs from failure-free"
+assert [h["step"] for h in hist] == list(range(tcfg.steps)), \
+    "training-level rewind happened — the sweep-level heal should hide it"
+
+print(f"final loss {hist[-1]['loss']:.4f} (start {hist[0]['loss']:.4f})")
+print("params + loss curve bitwise-identical to failure-free; "
+      "no training-level rewind")

@@ -68,17 +68,28 @@ class SweepStateStore:
     loop's buddy checkpointing above (on a real pod this memory is a
     neighbor host's RAM; here it stands in). Keeps ``keep`` most-recent
     snapshots (the previous one guards against dying mid-push).
+
+    ``version`` selects the sweep-state wire format (default: current).
+    v2 snapshots carry the coded parity slots, so a restore under
+    ``MDSScheme`` can joint-decode deaths at the resume boundary without a
+    re-encode vulnerability window; ``version=1`` reproduces the old
+    parity-less snapshots.
     """
 
-    def __init__(self, keep: int = 2):
+    def __init__(self, keep: int = 2, version: int = None):
         assert keep >= 1
         self.keep = keep
+        if version is None:
+            from repro.ft.online.state import WIRE_VERSION
+
+            version = WIRE_VERSION
+        self.version = version
         self._snaps: List[Dict[str, np.ndarray]] = []
 
     def push(self, state) -> None:
         from repro.ft.online.state import sweep_state_to_host
 
-        self._snaps.append(sweep_state_to_host(state))
+        self._snaps.append(sweep_state_to_host(state, version=self.version))
         del self._snaps[: -self.keep]
 
     def __len__(self) -> int:

@@ -20,17 +20,21 @@ import numpy as np
 
 from repro.ft.online.state import (
     SweepState,
+    WIRE_VERSION,
     sweep_state_from_host,
     sweep_state_to_host,
 )
 
 
-def save_sweep_state(path: str, state: SweepState) -> str:
+def save_sweep_state(path: str, state: SweepState,
+                     version: int = WIRE_VERSION) -> str:
     """Suspend: write a mid-sweep state to ``path`` (``.npz`` appended if
-    missing). Atomic-ish: writes ``path + '.tmp'`` then renames."""
+    missing). Atomic-ish: writes ``path + '.tmp'`` then renames.
+    ``version=2`` (default) persists the coded parity slots; ``version=1``
+    writes the PR-9 format (still loadable, minus the parity)."""
     if not path.endswith(".npz"):
         path = path + ".npz"
-    arrays = sweep_state_to_host(state)
+    arrays = sweep_state_to_host(state, version=version)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)

@@ -18,6 +18,7 @@ acyclic).
 from repro.ft.online import state
 from repro.ft.online.state import (
     SweepState,
+    WIRE_VERSION,
     finalize,
     initial_sweep_state,
     run_steps,
@@ -29,7 +30,7 @@ from repro.ft.online.state import (
 
 __all__ = [
     "detect", "orchestrator", "state",
-    "SweepState", "finalize", "initial_sweep_state", "run_steps",
-    "state_lane_axes", "sweep_state_from_host", "sweep_state_to_host",
-    "sweep_step",
+    "SweepState", "WIRE_VERSION", "finalize", "initial_sweep_state",
+    "run_steps", "state_lane_axes", "sweep_state_from_host",
+    "sweep_state_to_host", "sweep_step",
 ]

@@ -15,6 +15,10 @@ Detectors (the ``OnlineDetector`` protocol):
   the in-flight R/C' heads). O(P) scalars transferred per poll; a ``deep``
   mode scans every float leaf for hardening/debugging. Latency bound: a
   death is reported at the first boundary after it happens — one segment.
+  Also exposes the split non-blocking form ``probe``/``collect``: ``probe``
+  dispatches ONE compiled sentinel reduction and returns a handle,
+  ``collect`` materializes it — the async orchestrator dispatches the next
+  segment between the two, hiding the transfer behind device work.
 * ``FailStopDetector`` — injectable test double: the harness ``declare``-s a
   death and the detector reports it after ``report_delay`` polls (0 = the
   very next boundary; 1 = one segment late, the false-negative case).
@@ -32,8 +36,10 @@ detector.
 from __future__ import annotations
 
 import time
-from typing import Dict, Iterable, List, Optional, Protocol, Set, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Protocol, \
+    Set, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -69,6 +75,31 @@ def _sentinel_values(comm, state: SweepState) -> np.ndarray:
         if x is not None:
             probes.append(x.reshape(P, -1)[:, 0])
     return np.asarray(jnp.sum(jnp.stack(probes), axis=0))
+
+
+# One jitted sentinel reduction per lane count; jax's cache specializes per
+# state treedef (= per cursor), exactly like the orchestrator's segments.
+_SENTINEL_FNS: Dict[int, Callable] = {}
+
+
+def _sentinel_program(P: int) -> Callable:
+    """Compiled form of ``_sentinel_values``: the whole probe (reshape +
+    head-gather + sum) is ONE dispatch returning a length-``P`` device
+    array, instead of ~7 eager ops per poll. The caller decides when to
+    materialize it — that split is what makes the probe non-blocking."""
+    fn = _SENTINEL_FNS.get(P)
+    if fn is None:
+        def sent(state: SweepState):
+            probes = []
+            for field in ("A", "window", "R_leaf", "R_carry", "C_prime"):
+                x = getattr(state, field)
+                if x is not None:
+                    probes.append(x.reshape(P, -1)[:, 0])
+            return jnp.sum(jnp.stack(probes), axis=0)
+
+        fn = jax.jit(sent)
+        _SENTINEL_FNS[P] = fn
+    return fn
 
 
 def _deep_nan_lanes(comm, state: SweepState) -> Set[int]:
@@ -116,6 +147,33 @@ class NaNSentinelDetector:
                    for i in np.flatnonzero(np.isnan(_sentinel_values(comm, state)))}
         newly = sorted(hit - self._reported)
         self._reported = hit  # healed lanes re-arm automatically
+        return newly
+
+    # -- non-blocking probe (the async orchestrator's poll) -----------------
+
+    def probe(self, comm, state: SweepState) -> Any:
+        """Dispatch the sentinel reduction WITHOUT materializing it and
+        return an opaque handle for :meth:`collect`. Under jax's async
+        dispatch the reduction runs while the host does other work (the
+        async orchestrator dispatches the next segment in between) — the
+        blocking transfer is deferred to ``collect``. ``deep`` mode has no
+        compiled form; its handle just defers the full scan."""
+        if self.deep:
+            return ("deep", state)
+        return ("sent", _sentinel_program(comm.axis_size())(state))
+
+    def collect(self, comm, handle: Any) -> List[int]:
+        """Materialize a :meth:`probe` handle into the newly-dead list —
+        the blocking half of the split poll. Same report-once semantics as
+        ``poll``: a lane is returned at most once per death and re-arms
+        after ``revive`` (or automatically once its sentinels are finite)."""
+        kind, payload = handle
+        if kind == "deep":
+            hit = _deep_nan_lanes(comm, payload)
+        else:
+            hit = {int(i) for i in np.flatnonzero(np.isnan(np.asarray(payload)))}
+        newly = sorted(hit - self._reported)
+        self._reported = hit
         return newly
 
     def revive(self, lane: int) -> None:

@@ -182,6 +182,16 @@ class SweepOrchestrator:
         bitwise-checked, logged as ``SpeculationEvent`` in
         ``self.speculations``); EVICT (or ``escalate_after`` exhausted)
         poisons the lane and escalates to a SHRINK transition.
+    async_segments:
+        Double-buffered segment execution: dispatch segment N+1 before
+        collecting the detector probe on segment N's boundary (the probe
+        itself is the split non-blocking ``probe``/``collect`` form when
+        the detector has one). Results are bitwise-identical to the sync
+        loop — a fault-hook mutation or a detected death discards the
+        in-flight speculation and re-dispatches from the recovered state.
+        REBUILD/ABORT semantics only (no elastic/straggler/fused
+        composition). ``benchmarks/bench_train.py`` gates async strictly
+        cheaper per boundary than sync.
     """
 
     def __init__(
@@ -207,6 +217,7 @@ class SweepOrchestrator:
         straggler_monitor: Optional[StragglerMonitor] = None,
         lane_clock: Optional[Callable] = None,
         scheme: Optional[CodingScheme] = None,
+        async_segments: bool = False,
     ):
         assert comm is not None, "comm is required"
         self.comm = comm
@@ -246,11 +257,25 @@ class SweepOrchestrator:
         self.straggler_monitor = straggler_monitor
         self.lane_clock = lane_clock
         self.scheme = XORPairScheme() if scheme is None else scheme
+        self.async_segments = async_segments
+        if async_segments:
+            assert semantics in (Semantics.REBUILD, Semantics.ABORT), (
+                "async double-buffered segments compose with REBUILD/ABORT "
+                "only; elastic transitions re-mesh the world mid-run and "
+                "would invalidate every in-flight speculation")
+            assert straggler_monitor is None and grow_at is None and not fused
+        # set by from_state: a resumed orchestrator owes the resume boundary
+        # a hook/poll pass BEFORE running any segment (deaths that struck
+        # while the sweep was suspended are recoverable only from the
+        # persisted state — under MDSScheme that needs the persisted parity
+        # slots, wire-format v2)
+        self._resumed = False
         self.speculations: List[SpeculationEvent] = []
         self._spec_counts: Dict[int, int] = {}
         self.events: List[RecoveryEvent] = []
         # run statistics (benchmarks read these)
         self.segments_run = 0
+        self.boundaries = 0
         self.poll_s = 0.0
         self.recover_s = 0.0
 
@@ -260,7 +285,9 @@ class SweepOrchestrator:
         ``repro.ckpt.load_sweep_state`` or a diskless snapshot). The
         recovery-event log of the previous incarnation is not carried
         over."""
-        return cls(comm=comm, state=state, **kw)
+        orch = cls(comm=comm, state=state, **kw)
+        orch._resumed = True
+        return orch
 
     # -- segments ----------------------------------------------------------
 
@@ -306,6 +333,11 @@ class SweepOrchestrator:
         Under SHRINK/BLANK semantics returns ``ElasticSweepResult``
         instead — epochs at different world sizes have no common lane
         layout for factors, so R is host-spliced."""
+        if self._resumed:
+            self._resumed = False
+            self._resume_boundary_pass()
+        if self.async_segments:
+            return self._run_async()
         boundary = 0
         while True:
             # re-read per iteration: an elastic transition swaps in a new
@@ -316,6 +348,7 @@ class SweepOrchestrator:
                 self.state = self._segment(self.state)
                 self.segments_run += 1
             boundary += 1
+            self.boundaries += 1
             # re-encode the parity slots from the (all-live) boundary state
             # BEFORE the fault hooks / detector can observe deaths for this
             # boundary: the decode must see survivors exactly as encoded
@@ -348,6 +381,104 @@ class SweepOrchestrator:
                 break
         if self.elastic is not None:
             return self.elastic.finish(self.comm, self.state, self.events)
+        R, factors, bundles = finalize(self.comm, self.state)
+        return FTSweepResult(R=R, factors=factors, bundles=bundles,
+                             events=self.events)
+
+    def _resume_boundary_pass(self) -> None:
+        """Hook/poll pass at the RESUME boundary, before any segment runs.
+
+        A death that struck while the sweep was suspended (or is injected
+        at the resume point) must be recovered from the state exactly as
+        persisted: the parity slots are NOT re-encoded first — under
+        ``MDSScheme`` the joint decode uses the persisted ``state.code``
+        (sweep-state wire format v2, ``repro.ft.online.state``). A v1 state
+        resumes with ``code=None``, so a multi-death at this boundary that
+        exceeds the XOR pairing is honestly ``UnrecoverableFailure`` — the
+        re-encode window of vulnerability that v2 closes."""
+        if self.state.cursor is None:
+            return
+        geom = self.state.geom
+        point = prev_sweep_point(self.state.cursor, geom.n_panels, geom.levels)
+        if point is None:
+            return  # resumed at the very first point: nothing completed yet
+        for hook in self.fault_hooks:
+            self.state = hook(self.comm, self.state)
+        t0 = time.perf_counter()
+        newly = list(self.detector.poll(self.comm, self.state))
+        self.poll_s += time.perf_counter() - t0
+        if newly:
+            self._recover(newly, point)
+
+    def _poll_async(self, state: SweepState) -> List[int]:
+        """One detector poll through the split ``probe``/``collect`` form
+        when the detector has it (``NaNSentinelDetector``): the caller
+        dispatches device work between probe dispatch and collect. Plain
+        ``poll`` is the fallback for protocol-only detectors."""
+        probe = getattr(self.detector, "probe", None)
+        if probe is None:
+            return list(self.detector.poll(self.comm, state))
+        return list(self.detector.collect(self.comm, probe(self.comm, state)))
+
+    def _run_async(self) -> FTSweepResult:
+        """The double-buffered segment loop (async mode).
+
+        Per boundary the sync loop serializes [segment, refresh, hooks,
+        poll, recover]; under jax's async dispatch the poll is the only
+        step that *must* materialize device values, so this loop dispatches
+        the NEXT segment speculatively before collecting the detector probe
+        — the device computes segment N+1 while the host blocks on segment
+        N's sentinels. The speculation is kept only when the boundary was
+        quiet; a fault-hook mutation (object identity — hooks return the
+        same state when they do nothing) or a detected death discards it
+        and re-dispatches from the authoritative recovered state, which is
+        exactly what the sync loop would have run — results stay bitwise
+        identical to sync execution (``tests/test_online_recovery.py``
+        gates this differentially)."""
+        boundary = 0
+        cur = self.state
+        if cur.cursor is not None:
+            cur = self._segment(cur)
+            self.segments_run += 1
+        while True:
+            geom = cur.geom
+            # re-encode parity from the boundary state BEFORE anything can
+            # observe this boundary's deaths (same contract as sync)
+            cur = self.scheme.refresh(self.comm, cur)
+            point = prev_sweep_point(cur.cursor, geom.n_panels, geom.levels)
+            pre_hooks = cur
+            for hook in self.fault_hooks:
+                cur = hook(self.comm, cur)
+            spec = None
+            if cur is pre_hooks and cur.cursor is not None:
+                # quiet so far: dispatch the next segment ahead of the
+                # (blocking) detector collect — the double buffer
+                spec = self._segment(cur)
+            t0 = time.perf_counter()
+            newly = self._poll_async(cur)
+            self.poll_s += time.perf_counter() - t0
+            boundary += 1
+            self.boundaries += 1
+            self.state = cur
+            if newly:
+                spec = None  # speculated from a state recovery rewrites
+                self._recover(newly, point)
+            for hook in self.boundary_hooks:
+                hook(self)
+            if self.store is not None and self.persist_every and (
+                    boundary % self.persist_every == 0
+                    or self.state.cursor is None):
+                self.store.push(self.state)
+            if self.state.cursor is None:
+                break
+            if spec is not None and self.state is cur:
+                cur = spec
+                self.segments_run += 1
+            else:
+                # a hook/recovery rewrote the state: the speculative
+                # dispatch is stale — re-dispatch from the real boundary
+                cur = self._segment(self.state)
+                self.segments_run += 1
         R, factors, bundles = finalize(self.comm, self.state)
         return FTSweepResult(R=R, factors=factors, bundles=bundles,
                              events=self.events)
@@ -466,6 +597,20 @@ class SweepOrchestrator:
 
     def _heal(self, newly: List[int], point) -> None:
         dead = set(newly)
+        shardings = None
+        if self.step_fn is not None:
+            # The REBUILD replay must be bitwise-identical to the SimComm
+            # oracle, but on the shard_map path the state lives as
+            # lane-sharded global arrays: eager replay math on those
+            # compiles auto-sharded executables whose reduction order
+            # drifts from the single-device programs by ~1 ulp. Gather to
+            # one device for the heal and shard back after — both pure
+            # data movement.
+            shardings = jax.tree_util.tree_map(
+                lambda x: x.sharding, self.state)
+            dev = jax.devices()[0]
+            self.state = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, dev), self.state)
 
         def on_recovered(lane: int) -> None:
             dead.discard(lane)
@@ -486,6 +631,9 @@ class SweepOrchestrator:
             on_recovered=on_recovered,
             scheme=self.scheme,
         )
+        if shardings is not None:
+            self.state = jax.tree_util.tree_map(
+                jax.device_put, self.state, shardings)
         self.recover_s += sum(e.elapsed_s for e in events)
         self.events.extend(events)
 

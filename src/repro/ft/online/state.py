@@ -93,11 +93,17 @@ _ARRAY_FIELDS = (
     "code",
 )
 
-# Fields excluded from the host wire format (kept at version 1): the coded
-# parity slots are derivable state — a resumed sweep re-encodes them at its
-# first boundary (`CodingScheme.refresh`), so persisting them would only
-# grow checkpoints and fork the format.
-_EPHEMERAL_FIELDS = ("code",)
+# The sweep-state wire format version written by default. v1 excluded the
+# coded parity slots as derivable state (a resumed sweep re-encodes at its
+# first boundary) — but that re-encode is a window of vulnerability: a
+# multi-death present AT the resume boundary can only be joint-decoded from
+# the parity as persisted (`SweepOrchestrator._resume_boundary_pass`), which
+# v1 threw away. v2 serializes `SweepState.code`; v1 stays loadable (the
+# regression test writes and reloads both).
+WIRE_VERSION = 2
+
+# Fields excluded from wire format v1 (the v2 writer keeps them).
+_V1_EXCLUDED_FIELDS = ("code",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,8 +150,9 @@ class SweepState:
     # parity per protected leaf, re-encoded at every boundary by the
     # scheme's refresh; None under the plain XOR scheme. No lane axis —
     # the parity slots model dedicated checksum lanes outside the compute
-    # failure domain (skip-axis -1 in state_lane_axes; never poisoned,
-    # never serialized).
+    # failure domain (skip-axis -1 in state_lane_axes; never poisoned;
+    # serialized since wire format v2 so a resumed MDS run keeps its
+    # redundancy across the restart).
     code: Any = None
 
     @property
@@ -466,10 +473,15 @@ def state_lane_axes(state: SweepState) -> SweepState:
 # -- host serialization (the SweepState wire format, DESIGN.md §9) -----------
 
 
-def _flat_arrays(state: SweepState) -> Dict[str, Any]:
+def _wire_excluded(version: int) -> Tuple[str, ...]:
+    assert version in (1, 2), f"unknown sweep-state wire version {version}"
+    return _V1_EXCLUDED_FIELDS if version == 1 else ()
+
+
+def _flat_arrays(state: SweepState, version: int) -> Dict[str, Any]:
     flat: Dict[str, Any] = {}
     for f in _ARRAY_FIELDS:
-        if f in _EPHEMERAL_FIELDS:
+        if f in _wire_excluded(version):
             continue
         v = getattr(state, f)
         if v is None:
@@ -486,24 +498,32 @@ def _flat_arrays(state: SweepState) -> Dict[str, Any]:
     return flat
 
 
-def sweep_state_to_host(state: SweepState) -> Dict[str, np.ndarray]:
+def sweep_state_to_host(state: SweepState,
+                        version: int = WIRE_VERSION) -> Dict[str, np.ndarray]:
     """Flatten a state to named host (numpy) arrays plus a ``__meta__``
     JSON record (geometry, cursor, per-field structure) — the persistable
-    wire format. Inverse: ``sweep_state_from_host``."""
-    arrays = {k: np.asarray(v) for k, v in _flat_arrays(state).items()}
+    wire format. Inverse: ``sweep_state_from_host``.
+
+    ``version=2`` (default) includes the ``code`` parity slots, so a
+    suspended ``MDSScheme`` run resumes with its coded redundancy intact;
+    ``version=1`` writes the PR-9 format (no parity — a resumed state
+    re-encodes at its first boundary and cannot joint-decode deaths present
+    at the resume boundary itself)."""
+    excluded = _wire_excluded(version)
+    arrays = {k: np.asarray(v) for k, v in _flat_arrays(state, version).items()}
     meta = {
-        "version": 1,
+        "version": version,
         "geom": list(state.geom),
         "cursor": list(state.cursor) if state.cursor is not None else None,
         "none_fields": [
             f for f in _ARRAY_FIELDS
-            if f not in _EPHEMERAL_FIELDS
+            if f not in excluded
             and not isinstance(getattr(state, f), tuple)
             and getattr(state, f) is None
         ],
         "tuple_lens": {
             f: len(getattr(state, f)) for f in _ARRAY_FIELDS
-            if f not in _EPHEMERAL_FIELDS
+            if f not in excluded
             and isinstance(getattr(state, f), tuple)
         },
     }
@@ -517,7 +537,8 @@ def sweep_state_from_host(arrays: Dict[str, np.ndarray],
     loaded ``.npz``). ``to_device=False`` keeps numpy leaves — structural
     inspection with no live jax backend needed."""
     meta = json.loads(str(arrays["__meta__"]))
-    assert meta["version"] == 1, meta
+    version = meta["version"]
+    assert version in (1, 2), meta
     geom = SweepGeometry(*meta["geom"])
     cursor = tuple(meta["cursor"]) if meta["cursor"] is not None else None
     conv = jnp.asarray if to_device else np.asarray
@@ -527,8 +548,8 @@ def sweep_state_from_host(arrays: Dict[str, np.ndarray],
 
     fields: Dict[str, Any] = {}
     for f in _ARRAY_FIELDS:
-        if f in _EPHEMERAL_FIELDS:
-            fields[f] = None  # parity slots re-encode at the first boundary
+        if f in _wire_excluded(version):
+            fields[f] = None  # v1: parity re-encodes at the first boundary
         elif f in meta["none_fields"]:
             fields[f] = None
         elif f in meta["tuple_lens"]:

@@ -74,6 +74,18 @@ def make_lane_mesh(n_lanes: Optional[int] = None, axis_name: str = "qr"):
     return compat.make_mesh((n_lanes,), (axis_name,))
 
 
+def pow2_lanes(n_devices: Optional[int] = None) -> int:
+    """Largest power-of-two lane count usable on ``n_devices`` (default:
+    the visible device count). The butterfly needs 2^k lanes, so a non-pow2
+    training pod (e.g. P=48 hosts) runs its optimizer-internal sweeps on
+    the largest power-of-two prefix (32) and leaves the rest to data
+    parallelism — the FT training runtime sizes its lane mesh with this."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    assert n_devices >= 1
+    return 1 << (n_devices.bit_length() - 1)
+
+
 def ft_caqr_sweep_spmd(
     A: jax.Array,
     panel_width: int,

@@ -65,6 +65,61 @@ def _orth(M: jax.Array) -> jax.Array:
     return jax.vmap(_orth2d)(flat).reshape(lead + M.shape[-2:])
 
 
+def _orth_default(path, m: jax.Array) -> jax.Array:
+    return _orth(m)
+
+
+def muon_moments(grads, state: MuonState, params,
+                 *, b1: float = 0.95, adam_b2: float = 0.95):
+    """The momentum / second-moment update, as one reusable phase.
+
+    Shared by the monolithic :func:`caqr_muon` update and the FT training
+    runtime's grad phase (``repro.train.ftrun``) — ONE floating-point
+    program, so the split-phase runtime cannot drift from the optimizer it
+    reroutes. Returns ``(mom, nu)``."""
+    tmp = jax.tree_util.tree_map_with_path
+
+    def upd_mom(path, g, m, p):
+        if _is_muon(path, p):
+            return b1 * m + g.astype(jnp.float32)
+        return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+    def upd_nu(path, g, v, p):
+        if _is_muon(path, p):
+            return v
+        return adam_b2 * v + (1 - adam_b2) * jnp.square(g.astype(jnp.float32))
+
+    return (tmp(upd_mom, grads, state.mom, params),
+            tmp(upd_nu, grads, state.nu, params))
+
+
+def muon_deltas(params, mom, nu, lr, t,
+                *, b1: float = 0.95, adam_b2: float = 0.95,
+                eps: float = 1e-8, weight_decay: float = 0.0,
+                adam_scale: float = 0.3, orth=_orth_default):
+    """The parameter-delta phase: muon leaves get ``orth(path, mom)``
+    (default: the local TSQR chain ``_orth``), everything else the
+    Adam-style scaling. ``t`` is the float step count AFTER increment.
+
+    The FT runtime passes an ``orth`` override that substitutes the
+    Q factors its FT-CAQR sweeps computed for the routed leaves, so the
+    surrounding arithmetic stays this exact program."""
+    tmp = jax.tree_util.tree_map_with_path
+
+    def delta(path, p, m, v):
+        if _is_muon(path, p):
+            O = orth(path, m)
+            scale = jnp.sqrt(jnp.maximum(1.0, p.shape[-2] / p.shape[-1]))
+            d = O * scale + weight_decay * p.astype(jnp.float32)
+            return (-lr * d).astype(p.dtype)
+        m_hat = m / (1 - b1 ** t)
+        v_hat = v / (1 - adam_b2 ** t)
+        d = m_hat / (jnp.sqrt(v_hat) + eps)
+        return (-lr * adam_scale * d).astype(p.dtype)
+
+    return tmp(delta, params, mom, nu)
+
+
 def caqr_muon(
     b1: float = 0.95,
     adam_b2: float = 0.95,
@@ -81,33 +136,10 @@ def caqr_muon(
     def update(grads, state: MuonState, params, lr):
         step = state.step + 1
         t = step.astype(jnp.float32)
-        tmp = jax.tree_util.tree_map_with_path
-
-        def upd_mom(path, g, m, p):
-            if _is_muon(path, p):
-                return b1 * m + g.astype(jnp.float32)
-            return b1 * m + (1 - b1) * g.astype(jnp.float32)
-
-        def upd_nu(path, g, v, p):
-            if _is_muon(path, p):
-                return v
-            return adam_b2 * v + (1 - adam_b2) * jnp.square(g.astype(jnp.float32))
-
-        mom = tmp(upd_mom, grads, state.mom, params)
-        nu = tmp(upd_nu, grads, state.nu, params)
-
-        def delta(path, p, m, v):
-            if _is_muon(path, p):
-                O = _orth(m)
-                scale = jnp.sqrt(jnp.maximum(1.0, p.shape[-2] / p.shape[-1]))
-                d = O * scale + weight_decay * p.astype(jnp.float32)
-                return (-lr * d).astype(p.dtype)
-            m_hat = m / (1 - b1 ** t)
-            v_hat = v / (1 - adam_b2 ** t)
-            d = m_hat / (jnp.sqrt(v_hat) + eps)
-            return (-lr * adam_scale * d).astype(p.dtype)
-
-        updates = tmp(delta, params, mom, nu)
+        mom, nu = muon_moments(grads, state, params, b1=b1, adam_b2=adam_b2)
+        updates = muon_deltas(
+            params, mom, nu, lr, t, b1=b1, adam_b2=adam_b2, eps=eps,
+            weight_decay=weight_decay, adam_scale=adam_scale)
         return updates, MuonState(step=step, mom=mom, nu=nu)
 
     return Optimizer(init=init, update=update)

@@ -41,6 +41,32 @@ def _tile_for(rows: int, cols: int) -> int:
     return rows
 
 
+def psgd_project(G: jax.Array, omega: jax.Array,
+                 error: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Phase 1 of the split compression: the error-compensated gradient and
+    its sketch projection ``(Gc, Gc @ omega)``. The caller reduces the
+    projection across lanes and orthonormalizes it — ``compress_reduce``
+    does both inline; the FT training runtime routes the orthonormalization
+    through a host-driven FT-CAQR sweep instead."""
+    Gc = G.astype(jnp.float32) + error
+    return Gc, Gc @ omega.astype(jnp.float32)
+
+
+def psgd_rfactor(Gc: jax.Array, Q: jax.Array) -> jax.Array:
+    """Phase 2: this lane's R contribution ``Gc^T @ Q`` (reduce across
+    lanes before :func:`psgd_complete`)."""
+    return Gc.T @ Q
+
+
+def psgd_complete(Gc: jax.Array, Q: jax.Array, R: jax.Array,
+                  out_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Phase 3: reconstruction and error feedback from the reduced R —
+    returns ``(G_hat, new_error)``. Same arithmetic whether Q came from the
+    inline TSQR or an FT-CAQR sweep."""
+    G_hat = Q @ R.T
+    return G_hat.astype(out_dtype), Gc - G_hat
+
+
 def compress_reduce(
     G: jax.Array,          # (m, n) this lane's gradient shard
     omega: jax.Array,      # (n, r) sketch — warm-started with the previous
@@ -53,17 +79,15 @@ def compress_reduce(
     axis_name=None runs the compression locally (rank-r filter only)."""
     m, n = G.shape
     r = omega.shape[1]
-    Gc = G.astype(jnp.float32) + error
-    P = Gc @ omega.astype(jnp.float32)                     # (m, r)
+    Gc, P = psgd_project(G, omega, error)                  # (m, r)
     if axis_name is not None:
         P = jax.lax.pmean(P, axis_name)
     Q, _ = tsqr_orthonormalize(P, _tile_for(m, r))         # paper's TSQR
-    R = Gc.T @ Q                                           # (n, r)
+    R = psgd_rfactor(Gc, Q)                                # (n, r)
     if axis_name is not None:
         R = jax.lax.pmean(R, axis_name)
-    G_hat = Q @ R.T
-    new_error = Gc - G_hat
-    return G_hat.astype(G.dtype), new_error, R
+    G_hat, new_error = psgd_complete(Gc, Q, R, G.dtype)
+    return G_hat, new_error, R
 
 
 def init_state(key, params, rank: int = 8, min_size: int = 4096):

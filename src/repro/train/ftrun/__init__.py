@@ -1,0 +1,29 @@
+"""Fault-tolerant training runtime (DESIGN.md §14): the optimizer's own
+factorizations run as online FT-CAQR sweeps, healed in place when lanes
+die mid-step, suspendable/resumable across process restarts, with optional
+async double-buffered segment execution."""
+from repro.train.ftrun.engine import QREngine, SuspendAfter, SuspendSweep
+from repro.train.ftrun.runtime import (
+    FTRunConfig,
+    FTTrainer,
+    StepSweepKiller,
+    TrainingSuspended,
+)
+from repro.train.ftrun.tasks import (
+    QRTask,
+    plan_muon_tasks,
+    plan_psgd_tasks,
+)
+
+__all__ = [
+    "QREngine",
+    "SuspendAfter",
+    "SuspendSweep",
+    "FTRunConfig",
+    "FTTrainer",
+    "StepSweepKiller",
+    "TrainingSuspended",
+    "QRTask",
+    "plan_muon_tasks",
+    "plan_psgd_tasks",
+]

@@ -1,0 +1,207 @@
+"""The FT-QR engine behind the fault-tolerant training runtime.
+
+One ``QREngine`` instance serves every optimizer-internal factorization of
+a training run (DESIGN.md §14): each ``orthonormalize`` call is a full
+windowed FT-CAQR sweep driven by the online orchestrator (DESIGN.md §9) —
+segment boundaries, runtime failure detection, REBUILD healing (or MDS
+joint decode), optional async double-buffered segments — so a lane killed
+*inside* an optimizer step is healed inside that step and the returned Q is
+bitwise-identical to the failure-free sweep.
+
+Execution backends (both drive the same ``sweep_step`` program):
+
+* default — jitted host segments over ``SimComm`` (lane axis = leading
+  array axis);
+* ``mesh=`` — ``shard_map`` segments over a 1-D lane mesh
+  (``repro.launch.spmd_qr.make_spmd_sweep_step``), the production SPMD
+  path; state lives lane-sharded on the mesh between segments.
+
+Q recovery: the sweep produces the replicated R factor; the engine forms
+``Q = A R^{-1}`` with one triangular solve. In exact arithmetic
+``R^T R = A^T A`` regardless of the zero rows used to pad ``A`` to a
+lane-divisible height, so Q is orthonormal with A's column space — and
+because R is bitwise-reproducible under failures, so is Q.
+
+Suspension: a boundary hook may raise :class:`SuspendSweep` carrying the
+boundary-consistent state; the training runtime persists it
+(``repro.ckpt.sweep``, wire v2 keeps the MDS parity slots) and a fresh
+process resumes the sweep mid-factorization via the orchestrator's
+``from_state``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import SimComm
+from repro.ft.online.detect import NaNSentinelDetector
+from repro.ft.online.orchestrator import SweepOrchestrator
+from repro.ft.online.state import SweepState
+from repro.ft.semantics import Semantics
+
+
+class SuspendSweep(Exception):
+    """Raised by an engine boundary hook to suspend the in-flight sweep.
+    Carries the boundary-consistent ``SweepState`` (post-recovery, parity
+    refreshed) — persist it with ``repro.ckpt.save_sweep_state`` and resume
+    with ``QREngine.orthonormalize(..., resume_state=...)``."""
+
+    def __init__(self, state: SweepState):
+        super().__init__("sweep suspended at a segment boundary")
+        self.state = state
+
+
+class SuspendAfter:
+    """Boundary hook: raise :class:`SuspendSweep` once ``n`` cumulative
+    segment boundaries (across all sweeps of the engine) have run. The
+    test/demo lever for "process dies mid-factorization": the sweep state
+    at the raise is exactly what a periodic persist would have captured."""
+
+    def __init__(self, n: int):
+        assert n > 0
+        self.n = n
+        self.seen = 0
+
+    def __call__(self, orch: SweepOrchestrator) -> None:
+        self.seen += 1
+        if self.seen >= self.n and orch.state.cursor is not None:
+            raise SuspendSweep(orch.state)
+
+
+@jax.jit
+def _q_from_r(A: jax.Array, R: jax.Array) -> jax.Array:
+    # Q = A R^{-1}  via  R^T Q^T = A^T  (one triangular solve, no inverse)
+    return jax.scipy.linalg.solve_triangular(R, A.T, trans=1,
+                                             lower=False).T
+
+
+class QREngine:
+    """Factorization service for optimizer-internal FT-CAQR sweeps.
+
+    Parameters
+    ----------
+    n_lanes:
+        Sweep lanes (power of two — the butterfly's requirement; see
+        ``repro.launch.spmd_qr.pow2_lanes`` for non-pow2 pods).
+    panel_width:
+        Sweep panel width (clamped per call to the matrix's column count).
+    mesh:
+        Optional 1-D lane mesh: segments run as shard_map programs over it
+        instead of jitted host segments. ``mesh`` lane count must equal
+        ``n_lanes``.
+    scheme:
+        Optional ``CodingScheme`` (e.g. ``MDSScheme(f)``) — parity refresh
+        at every boundary, joint decode on multi-death.
+    semantics, async_segments, store, persist_every, fault_hooks,
+    boundary_hooks:
+        Passed to every sweep's ``SweepOrchestrator``. Hooks are shared,
+        stateful objects living across sweeps (fault injectors gate on the
+        runtime's current step/task; ``SuspendAfter`` counts cumulative
+        boundaries). The detector is fresh per sweep (its report-once state
+        is per-matrix).
+
+    Stats (cumulative over the engine's lifetime, for the train bench):
+    ``sweeps``, ``boundaries``, ``segments``, ``poll_s``, ``sweep_s``.
+    """
+
+    def __init__(
+        self,
+        n_lanes: int = 4,
+        panel_width: int = 16,
+        mesh=None,
+        axis_name: str = "qr",
+        scheme=None,
+        semantics: Semantics = Semantics.REBUILD,
+        async_segments: bool = False,
+        detector_factory: Callable[[], object] = NaNSentinelDetector,
+        fault_hooks: Sequence = (),
+        boundary_hooks: Sequence = (),
+        store=None,
+        persist_every: Optional[int] = None,
+    ):
+        assert n_lanes & (n_lanes - 1) == 0, "lanes must be a power of two"
+        self.n_lanes = n_lanes
+        self.panel_width = panel_width
+        self.comm = SimComm(n_lanes)
+        if mesh is not None:
+            from repro.launch.spmd_qr import make_spmd_sweep_step
+
+            (mesh_lanes,) = mesh.devices.shape
+            assert mesh_lanes == n_lanes, (mesh_lanes, n_lanes)
+            self.step_fn = make_spmd_sweep_step(mesh, axis_name)
+        else:
+            self.step_fn = None
+        self.scheme = scheme
+        self.semantics = semantics
+        self.async_segments = async_segments
+        self.detector_factory = detector_factory
+        self.fault_hooks = list(fault_hooks)
+        self.boundary_hooks = list(boundary_hooks)
+        self.store = store
+        self.persist_every = persist_every
+        # cumulative stats
+        self.sweeps = 0
+        self.boundaries = 0
+        self.segments = 0
+        self.poll_s = 0.0
+        self.sweep_s = 0.0
+
+    # -- one factorization ---------------------------------------------------
+
+    def _orchestrator(self, A0, panel_width: int,
+                      resume_state: Optional[SweepState]):
+        kw = dict(
+            detector=self.detector_factory(),
+            step_fn=self.step_fn,
+            fault_hooks=self.fault_hooks,
+            boundary_hooks=self.boundary_hooks,
+            semantics=self.semantics,
+            scheme=self.scheme,
+            async_segments=self.async_segments,
+            store=self.store,
+            persist_every=self.persist_every,
+        )
+        if resume_state is not None:
+            return SweepOrchestrator.from_state(resume_state, self.comm, **kw)
+        return SweepOrchestrator(A0, self.comm, panel_width, **kw)
+
+    def factorize(self, M: jax.Array,
+                  resume_state: Optional[SweepState] = None) -> jax.Array:
+        """FT-CAQR sweep of tall-or-square ``M (m, n)``; returns the
+        replicated ``(n, n)`` R factor. ``resume_state`` continues a
+        suspended sweep instead of starting fresh (``M`` is then only used
+        for shape bookkeeping — the state IS the computation)."""
+        m, n = M.shape
+        assert m >= n, "factorize wants tall input; use orthonormalize"
+        P = self.n_lanes
+        pad = (-m) % P
+        Ap = M if pad == 0 else jnp.concatenate(
+            [M, jnp.zeros((pad, n), M.dtype)], axis=0)
+        A0 = Ap.reshape(P, (m + pad) // P, n)
+        orch = self._orchestrator(A0, min(self.panel_width, n), resume_state)
+        t0 = time.perf_counter()
+        try:
+            res = orch.run()
+        finally:
+            self.sweeps += 1
+            self.boundaries += orch.boundaries
+            self.segments += orch.segments_run
+            self.poll_s += orch.poll_s
+            self.sweep_s += time.perf_counter() - t0
+        return res.R[0]
+
+    def orthonormalize(self, M: jax.Array,
+                       resume_state: Optional[SweepState] = None) -> jax.Array:
+        """Q with ``M``'s column space (row space when ``M`` is wide — the
+        Muon convention, matching ``repro.optim.caqr_muon._orth2d``),
+        computed as ``A R^{-1}`` from an FT-CAQR sweep's R. Raises
+        :class:`SuspendSweep` through from a suspension hook."""
+        m, n = M.shape
+        tall = m >= n
+        A = M if tall else M.T
+        R = self.factorize(A.astype(jnp.float32), resume_state=resume_state)
+        Q = _q_from_r(A.astype(jnp.float32), R)
+        return Q if tall else Q.T

@@ -1,0 +1,407 @@
+"""FT training runtime: optimizer-internal FT-CAQR sweeps (DESIGN.md §14).
+
+``FTTrainer`` embeds the paper's fault-tolerant factorization *inside* the
+training step. Instead of the monolithic jitted step, an optimizer step is
+split into three phases:
+
+1. **grad phase** (jit) — loss, gradients, and the optimizer's moment
+   update, via the SAME builders the monolithic step uses
+   (``make_loss_and_grads``, ``muon_moments``) so the arithmetic is the
+   identical FP program;
+2. **factorization task loop** (host) — each planned :class:`QRTask` runs
+   a full online FT-CAQR sweep on the :class:`QREngine`: runtime failure
+   detection, REBUILD healing (or MDS joint decode), optionally async
+   double-buffered segments or shard_map execution over a lane mesh. A
+   lane killed mid-step is healed *inside the step*: the recovered Q is
+   bitwise-identical, so the loss curve is bitwise-identical to the
+   failure-free run with no training-level rewind;
+3. **finish phase** (jit) — ``muon_deltas`` with the engine's Q factors
+   substituted for the routed leaves, then the parameter update.
+
+Routings:
+
+* ``optimizer="caqr_muon"`` — the momentum orthogonalization of every
+  large Muon leaf goes through the engine (per stacked slice).
+* ``optimizer="adamw"`` + ``compression_rank>0`` — the PowerSGD-QR bridge:
+  per-lane gradients are compressed through the split
+  ``psgd_project``/``psgd_rfactor``/``psgd_complete`` phases with the
+  projection's orthonormalization rerouted through the engine.
+
+Checkpoint composition: a boundary hook may suspend training *mid-sweep*
+(:class:`SuspendSweep`); the trainer persists the model checkpoint plus the
+in-flight sweep state (wire v2 — MDS parity included) and raises
+:class:`TrainingSuspended`. ``FTTrainer.resume`` restores both in a fresh
+process: the grad phase and earlier tasks replay deterministically, the
+suspended sweep continues via the orchestrator's ``from_state``, and the
+final parameters are bitwise-identical to the uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import save
+from repro.ckpt.sweep import load_sweep_state, save_sweep_state
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.ft.coding import MDSScheme
+from repro.ft.failures import prev_sweep_point
+from repro.ft.online.state import WIRE_VERSION
+from repro.ft.semantics import Semantics
+import repro.optim.adamw as adamw_mod
+from repro.optim import powersgd
+from repro.optim.caqr_muon import (
+    MuonState,
+    _orth,
+    _path_str,
+    muon_deltas,
+    muon_moments,
+)
+from repro.train.loop import TrainConfig, Trainer
+from repro.train.step import TrainState, grad_norm, make_loss_and_grads
+from repro.train.ftrun.engine import QREngine, SuspendAfter, SuspendSweep
+from repro.train.ftrun.tasks import (
+    QRTask,
+    assemble_leaves,
+    leaf_by_path,
+    plan_muon_tasks,
+    plan_psgd_tasks,
+    task_slice,
+)
+
+
+@dataclasses.dataclass
+class FTRunConfig:
+    """Knobs of the FT factorization layer (the training knobs stay on
+    ``TrainConfig``)."""
+
+    qr_lanes: Optional[int] = None    # None: 4, or pow2_lanes() with a mesh
+    panel_width: int = 16
+    min_qr_size: int = 8192           # per-slice element floor for routing
+    use_mesh: bool = False            # shard_map segments over a lane mesh
+    async_segments: bool = False      # double-buffered segment dispatch
+    mds_f: int = 0                    # >0: MDSScheme(f) parity lanes
+    compression_rank: int = 0         # >0: PowerSGD bridge (adamw only)
+    compression_min_size: int = 8192
+    suspend_after_boundaries: int = 0  # >0: suspend mid-sweep (muon only)
+    sweep_path: str = ""              # default: <ckpt_dir>/sweep.npz
+    sweep_wire_version: int = WIRE_VERSION
+
+
+class TrainingSuspended(Exception):
+    """Raised when a sweep suspension hook fires: the model checkpoint and
+    the in-flight sweep state are on disk; ``FTTrainer.resume`` continues
+    the run bitwise-identically in a fresh process."""
+
+    def __init__(self, step: int, task: str, sweep_path: str):
+        super().__init__(
+            f"training suspended at step {step} inside sweep task {task!r}")
+        self.step = step
+        self.task = task
+        self.sweep_path = sweep_path
+
+
+class StepSweepKiller:
+    """Engine fault hook: poison ``lane`` during the optimizer-internal
+    sweep of training step ``at_step`` — optionally a specific ``task``
+    and/or sweep ``point``; by default the first completed point of the
+    step's first sweep. Fires once; records where it struck in
+    ``.struck`` as ``(step, task, point)``. The kill lands *inside* the
+    factorization, so recovery is the sweep's own REBUILD (no
+    training-level rewind happens)."""
+
+    def __init__(self, at_step: int, lane: int,
+                 task: Optional[str] = None,
+                 point: Optional[Tuple[int, str, int]] = None):
+        self.at_step = at_step
+        self.lane = lane
+        self.task = task
+        self.point = point
+        self.trainer: Optional["FTTrainer"] = None  # bound by FTTrainer
+        self.fired = False
+        self.struck: Optional[Tuple[int, str, Tuple[int, str, int]]] = None
+
+    def __call__(self, comm, state):
+        if self.fired or self.trainer is None:
+            return state
+        if self.trainer._cur_step != self.at_step:
+            return state
+        if self.task is not None and self.trainer._cur_task != self.task:
+            return state
+        pt = prev_sweep_point(state.cursor, state.geom.n_panels,
+                              state.geom.levels)
+        if pt is None or (self.point is not None and pt != self.point):
+            return state
+        from repro.ft.driver import obliterate_state
+
+        self.fired = True
+        self.struck = (self.trainer._cur_step, self.trainer._cur_task, pt)
+        return obliterate_state(comm, state, self.lane)
+
+
+# Per-slice PowerSGD phases over the lane axis (jit caches per shape).
+@jax.jit
+def _lane_project(G_l, omega, err_l):
+    Gc_l, P_l = jax.vmap(
+        lambda g, e: powersgd.psgd_project(g, omega, e))(G_l, err_l)
+    return Gc_l, jnp.mean(P_l, axis=0)
+
+
+@jax.jit
+def _lane_complete(Gc_l, Q):
+    R = jnp.mean(jax.vmap(
+        lambda gc: powersgd.psgd_rfactor(gc, Q))(Gc_l), axis=0)
+    G_hat, err_l = jax.vmap(
+        lambda gc: powersgd.psgd_complete(gc, Q, R, jnp.float32))(Gc_l)
+    return G_hat[0], err_l, R
+
+
+class FTTrainer(Trainer):
+    """``Trainer`` whose optimizer-internal factorizations run on a
+    :class:`QREngine` (see module docstring). Everything else — diskless
+    buddy checkpoints, lane-failure semantics, deterministic data replay —
+    is the base loop, shared verbatim through ``_execute_step``."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
+                 fcfg: Optional[FTRunConfig] = None,
+                 qr_fault_hooks: Sequence = ()):
+        super().__init__(cfg, tcfg, dcfg)
+        self.fcfg = fcfg = fcfg or FTRunConfig()
+        lanes = fcfg.qr_lanes
+        mesh = None
+        if fcfg.use_mesh:
+            from repro.launch.spmd_qr import make_lane_mesh, pow2_lanes
+
+            if lanes is None:
+                lanes = pow2_lanes()
+            mesh = make_lane_mesh(lanes)
+        elif lanes is None:
+            lanes = 4
+        self._qr_hooks = list(qr_fault_hooks)
+        for h in self._qr_hooks:
+            if hasattr(h, "trainer"):
+                h.trainer = self
+        boundary_hooks = []
+        if fcfg.suspend_after_boundaries:
+            boundary_hooks.append(SuspendAfter(fcfg.suspend_after_boundaries))
+        self.engine = QREngine(
+            n_lanes=lanes,
+            panel_width=fcfg.panel_width,
+            mesh=mesh,
+            scheme=MDSScheme(fcfg.mds_f) if fcfg.mds_f else None,
+            semantics=Semantics.REBUILD,
+            async_segments=fcfg.async_segments,
+            fault_hooks=self._qr_hooks,
+            boundary_hooks=boundary_hooks,
+        )
+        self._cur_step = -1
+        self._cur_task: Optional[str] = None
+        self._pending_resume: Optional[Tuple[str, object]] = None
+        self._mode = "plain"
+        if tcfg.optimizer == "caqr_muon":
+            self._mode = "muon"
+            self._tasks = plan_muon_tasks(self.state.params, fcfg.min_qr_size)
+            assert self._tasks, (
+                "no Muon leaf reaches min_qr_size; lower it or use the "
+                "plain Trainer")
+            self._grad_fn = jax.jit(self._make_muon_grad())
+            self._finish_fn = jax.jit(self._make_muon_finish())
+        elif fcfg.compression_rank > 0:
+            assert tcfg.optimizer == "adamw", (
+                "the PowerSGD bridge pairs with adamw")
+            self._mode = "psgd"
+            self._tasks = plan_psgd_tasks(self.state.params,
+                                          fcfg.compression_min_size)
+            assert self._tasks, "no leaf reaches compression_min_size"
+            self._lane_grad_fn = jax.jit(self._make_lane_grads())
+            self._psgd_finish_fn = jax.jit(self._make_psgd_finish())
+            self._psgd = self._init_psgd()
+        if fcfg.suspend_after_boundaries:
+            assert self._mode == "muon", (
+                "mid-sweep suspension is supported on the caqr_muon routing "
+                "(the PowerSGD bridge's host-side error buffers are not in "
+                "the model checkpoint)")
+
+    # -- diskless checkpoints carry the bridge's host-side state ------------
+
+    def _push_diskless(self, step: int) -> None:
+        blob = {"state": self.state, "step": step}
+        if self._mode == "psgd":
+            blob["psgd"] = self._psgd
+        for lane in self.active_lanes:
+            self.buddy.push(lane, blob)
+        self._last_diskless_step = step
+
+    def _restore_diskless(self, failed: int) -> int:
+        blob = self.buddy.recover(failed)
+        self.state = jax.tree_util.tree_map(jnp.asarray, blob["state"])
+        if "psgd" in blob:
+            self._psgd = jax.tree_util.tree_map(jnp.asarray, blob["psgd"])
+        return int(blob["step"])
+
+    # -- muon phases ---------------------------------------------------------
+
+    def _make_muon_grad(self):
+        loss_and_grads = make_loss_and_grads(self.cfg, self.tcfg.grad_accum)
+        lr_fn = self._lr_fn
+
+        def grad_phase(state: TrainState, batch):
+            loss, grads = loss_and_grads(state.params, batch)
+            mom, nu = muon_moments(grads, state.opt_state, state.params)
+            return (loss, grad_norm(grads), lr_fn(state.step),
+                    state.opt_state.step + 1, mom, nu)
+
+        return grad_phase
+
+    def _make_muon_finish(self):
+        def finish(state: TrainState, mom, nu, lr, ostep, qs):
+            def orth(path, m):
+                q = qs.get(_path_str(path))
+                return _orth(m) if q is None else q
+
+            updates = muon_deltas(state.params, mom, nu, lr,
+                                  ostep.astype(jnp.float32), orth=orth)
+            params = adamw_mod.apply_updates(state.params, updates)
+            return TrainState(params, MuonState(ostep, mom, nu),
+                              state.step + 1)
+
+        return finish
+
+    def _muon_step(self, step: int, batch) -> Dict:
+        loss, gnorm, lr, ostep, mom, nu = self._grad_fn(self.state, batch)
+        per_task: Dict[str, jax.Array] = {}
+        for task in self._tasks:
+            self._cur_task = task.name
+            resume = None
+            if (self._pending_resume is not None
+                    and self._pending_resume[0] == task.name):
+                resume = self._pending_resume[1]
+                self._pending_resume = None
+            M = task_slice(mom, task)
+            try:
+                per_task[task.name] = self.engine.orthonormalize(
+                    M, resume_state=resume)
+            except SuspendSweep as s:
+                self._suspend(step, task, s.state)
+        self._cur_task = None
+        qs = assemble_leaves(mom, per_task, self._tasks)
+        self.state = self._finish_fn(self.state, mom, nu, lr, ostep, qs)
+        return {"loss": loss, "lr": lr, "gnorm": gnorm}
+
+    # -- powersgd bridge -----------------------------------------------------
+
+    def _init_psgd(self):
+        key = jax.random.key(self.tcfg.seed + 1)
+        r = self.fcfg.compression_rank
+        st = {}
+        for t in self._tasks:
+            key, sub = jax.random.split(key)
+            st[t.name] = {
+                "omega": jax.random.normal(
+                    sub, (t.cols, r), jnp.float32) / jnp.sqrt(r),
+                "err": jnp.zeros((self.tcfg.n_lanes, t.rows, t.cols),
+                                 jnp.float32),
+            }
+        return st
+
+    def _make_lane_grads(self):
+        loss_and_grads = make_loss_and_grads(self.cfg, self.tcfg.grad_accum)
+        L = self.tcfg.n_lanes
+
+        def fn(state: TrainState, batch):
+            lanes = jax.tree_util.tree_map(
+                lambda x: x.reshape((L, x.shape[0] // L) + x.shape[1:]),
+                batch)
+            loss_l, grads_l = jax.vmap(
+                lambda b: loss_and_grads(state.params, b))(lanes)
+            return jnp.mean(loss_l), grads_l
+
+        return fn
+
+    def _make_psgd_finish(self):
+        opt, lr_fn = self.opt, self._lr_fn
+
+        def finish(state: TrainState, grads):
+            lr = lr_fn(state.step)
+            updates, opt_state = opt.update(grads, state.opt_state,
+                                            state.params, lr)
+            params = adamw_mod.apply_updates(state.params, updates)
+            return TrainState(params, opt_state, state.step + 1), lr
+
+        return finish
+
+    def _psgd_step(self, step: int, batch) -> Dict:
+        L = self.tcfg.n_lanes
+        loss, grads_l = self._lane_grad_fn(self.state, batch)
+        per_task: Dict[str, jax.Array] = {}
+        for task in self._tasks:
+            self._cur_task = task.name
+            st = self._psgd[task.name]
+            leaf_l = leaf_by_path(grads_l, task.path)
+            flat = leaf_l.reshape((L, -1) + leaf_l.shape[-2:])
+            G_l = flat[:, task.index if task.index is not None else 0]
+            Gc_l, proj = _lane_project(G_l, st["omega"], st["err"])
+            Q = self.engine.orthonormalize(proj)
+            G_hat, new_err, R = _lane_complete(Gc_l, Q)
+            st["omega"], st["err"] = R, new_err  # power-iteration warm start
+            per_task[task.name] = G_hat
+        self._cur_task = None
+        mean_grads = jax.tree_util.tree_map(
+            lambda g: jnp.mean(g, axis=0), grads_l)
+        comp = assemble_leaves(mean_grads, per_task, self._tasks)
+        reduced = jax.tree_util.tree_map_with_path(
+            lambda path, g: comp.get(_path_str(path), g), mean_grads)
+        self.state, lr = self._psgd_finish_fn(self.state, reduced)
+        return {"loss": loss, "lr": lr, "gnorm": grad_norm(reduced)}
+
+    # -- step dispatch -------------------------------------------------------
+
+    def _execute_step(self, step: int, batch) -> Dict:
+        self._cur_step = step
+        if self._mode == "muon":
+            return self._muon_step(step, batch)
+        if self._mode == "psgd":
+            return self._psgd_step(step, batch)
+        return super()._execute_step(step, batch)
+
+    # -- suspend / resume ----------------------------------------------------
+
+    def _sweep_path(self) -> str:
+        return self.fcfg.sweep_path or os.path.join(
+            self.tcfg.ckpt_dir, "sweep.npz")
+
+    def _suspend(self, step: int, task: QRTask, sweep_state) -> None:
+        os.makedirs(self.tcfg.ckpt_dir, exist_ok=True)
+        save.save(self.tcfg.ckpt_dir, step, self.state.params,
+                  self.state.opt_state,
+                  {"data_step": step, "ftrun_task": task.name})
+        path = self._sweep_path()
+        save_sweep_state(path, sweep_state,
+                         version=self.fcfg.sweep_wire_version)
+        raise TrainingSuspended(step, task.name, path)
+
+    @classmethod
+    def resume(cls, cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
+               fcfg: Optional[FTRunConfig] = None,
+               qr_fault_hooks: Sequence = ()) -> "FTTrainer":
+        """Rebuild a trainer from a suspended run's checkpoints: restores
+        params/opt state as of entering the suspended step, queues the
+        persisted in-flight sweep for ``from_state`` continuation, and sets
+        the loop to replay from that step (earlier tasks and the grad phase
+        re-run deterministically). Pass a ``fcfg`` without
+        ``suspend_after_boundaries`` unless another suspension is wanted."""
+        tr = cls(cfg, tcfg, dcfg, fcfg, qr_fault_hooks)
+        params, opt_state, manifest = save.restore(
+            tcfg.ckpt_dir, tr.state.params, tr.state.opt_state)
+        step = int(manifest["step"])
+        tr.state = TrainState(params, opt_state,
+                              jnp.asarray(step, jnp.int32))
+        tr._start_step = step
+        task = (manifest.get("extra") or {}).get("ftrun_task")
+        if task is not None:
+            tr._pending_resume = (task, load_sweep_state(tr._sweep_path()))
+        return tr

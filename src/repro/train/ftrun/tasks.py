@@ -1,0 +1,141 @@
+"""Task planning: which optimizer-internal factorizations go through the
+FT-QR engine, and how pytree leaves map onto 2-D sweeps.
+
+The planner walks the parameter tree once at trainer construction and
+emits one :class:`QRTask` per 2-D factorization the optimizer will need
+every step. Stacked leaves (layer groups ``(G, m, n)``, expert banks) are
+split per leading slice — each slice is an independent sweep, and because
+all slices of a leaf share one geometry they share one compiled segment
+cache entry. Wide slices are transposed (the Muon convention: orthogonalize
+the short side), so a whole smoke-model FFN routes as six ``(128, 64)``
+sweeps with a single compile.
+
+Leaves whose 2-D slice is smaller than ``min_qr_size`` elements stay on
+the optimizer's in-jit TSQR chain — a sweep's host-loop overhead is only
+worth paying on matrices large enough to matter (and where FT matters:
+those are also the ones sharded across lanes in production).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.optim.caqr_muon import _is_muon, _path_str
+
+
+@dataclasses.dataclass(frozen=True)
+class QRTask:
+    """One optimizer-internal factorization: ``name`` is ``path`` for 2-D
+    leaves, ``path#i`` for slice ``i`` of a stacked leaf. ``rows/cols`` is
+    the tall orientation actually swept (``transpose`` records whether the
+    slice was flipped to get there)."""
+
+    name: str
+    path: str
+    index: Optional[int]      # leading-slice index, None for 2-D leaves
+    rows: int
+    cols: int
+    transpose: bool
+
+
+def _leaf_tasks(path: str, leaf) -> List[QRTask]:
+    m, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+    rows, cols = (m, n) if m >= n else (n, m)
+    transpose = m < n
+    if leaf.ndim == 2:
+        return [QRTask(path, path, None, rows, cols, transpose)]
+    lead = int(np.prod(leaf.shape[:-2]))
+    return [QRTask(f"{path}#{i}", path, i, rows, cols, transpose)
+            for i in range(lead)]
+
+
+def plan_muon_tasks(params, min_qr_size: int = 8192) -> List[QRTask]:
+    """Tasks for ``caqr_muon``: every Muon-eligible leaf (same predicate as
+    the optimizer's own routing) whose per-slice size is at least
+    ``min_qr_size`` elements."""
+    tasks: List[QRTask] = []
+
+    def visit(path, p):
+        if not _is_muon(path, p):
+            return
+        if int(p.shape[-2]) * int(p.shape[-1]) < min_qr_size:
+            return
+        tasks.extend(_leaf_tasks(_path_str(path), p))
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return tasks
+
+
+def plan_psgd_tasks(params, min_size: int = 8192) -> List[QRTask]:
+    """Tasks for the PowerSGD bridge: 2-D-sliceable leaves big enough to
+    compress. No transpose — PowerSGD projects ``G @ omega`` and the
+    ``(m, r)`` projection is always tall (the sweep the engine runs is the
+    projection's, not the leaf's — rows/cols here describe the slice)."""
+    tasks: List[QRTask] = []
+
+    def visit(path, p):
+        if p.ndim < 2:
+            return
+        m, n = int(p.shape[-2]), int(p.shape[-1])
+        if m * n < min_size or m < 2 or n < 2:
+            return
+        ps = _path_str(path)
+        if p.ndim == 2:
+            tasks.append(QRTask(ps, ps, None, m, n, False))
+        else:
+            lead = int(np.prod(p.shape[:-2]))
+            tasks.extend(QRTask(f"{ps}#{i}", ps, i, m, n, False)
+                         for i in range(lead))
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return tasks
+
+
+def leaf_by_path(tree, path: str):
+    """Navigate a pytree by a ``/``-joined key path (the inverse of
+    ``repro.optim.caqr_muon._path_str``): dict keys, sequence indices, and
+    ``.attr`` components (``GetAttrKey`` renders as ``.name``) for
+    NamedTuple/dataclass nodes."""
+    node = tree
+    for k in path.split("/"):
+        if k.startswith("."):
+            node = getattr(node, k[1:])
+        elif isinstance(node, (list, tuple)):
+            node = node[int(k)]
+        else:
+            node = node[k]
+    return node
+
+
+def task_slice(tree, task: QRTask) -> jax.Array:
+    """The 2-D matrix a task factorizes, in its ORIGINAL orientation (the
+    engine handles the tall flip)."""
+    leaf = leaf_by_path(tree, task.path)
+    if task.index is None:
+        return leaf
+    flat = leaf.reshape((-1,) + leaf.shape[-2:])
+    return flat[task.index]
+
+
+def assemble_leaves(tree, per_task: Dict[str, jax.Array],
+                    tasks: List[QRTask]) -> Dict[str, jax.Array]:
+    """Reassemble per-task 2-D results into full leaf-shaped arrays keyed
+    by leaf path (stacking slice results back into the leading axes)."""
+    import jax.numpy as jnp
+
+    by_path: Dict[str, List[Tuple[int, jax.Array]]] = {}
+    for t in tasks:
+        by_path.setdefault(t.path, []).append(
+            (t.index if t.index is not None else 0, per_task[t.name]))
+    out: Dict[str, jax.Array] = {}
+    for path, pieces in by_path.items():
+        leaf = leaf_by_path(tree, path)
+        if len(pieces) == 1 and pieces[0][0] == 0 and leaf.ndim == 2:
+            out[path] = pieces[0][1]
+            continue
+        pieces.sort(key=lambda p: p[0])
+        out[path] = jnp.stack([q for _, q in pieces]).reshape(leaf.shape)
+    return out

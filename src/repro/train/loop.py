@@ -62,9 +62,9 @@ class Trainer:
             self.opt = caqr_muon()
         else:
             self.opt = adamw_mod.adamw()
-        lr_fn = warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+        self._lr_fn = warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
         self._step_fn = jax.jit(
-            make_train_step(cfg, self.opt, lr_fn, tcfg.grad_accum)
+            make_train_step(cfg, self.opt, self._lr_fn, tcfg.grad_accum)
         )
         params = tf.init_params(cfg, jax.random.key(tcfg.seed))
         self.state = TrainState(params, self.opt.init(params), jnp.zeros((), jnp.int32))
@@ -73,6 +73,7 @@ class Trainer:
         self.active_lanes: List[int] = list(range(tcfg.n_lanes))
         self.blanked: List[int] = []
         self._last_diskless_step = -1
+        self._start_step = 0          # nonzero when resuming a suspended run
         self.history: List[Dict] = []
 
     # -- diskless checkpoint of the full training state ---------------------
@@ -121,10 +122,23 @@ class Trainer:
         sel = np.concatenate([np.r_[r] for r in rows])
         return {k: jnp.asarray(v[sel]) for k, v in full.items()}
 
+    # -- step execution (overridden by the FT runtime) ----------------------
+    def _execute_step(self, step: int, batch) -> Dict[str, Any]:
+        """One optimizer step: advance ``self.state``, return metrics.
+
+        The base trainer runs the monolithic jitted step. The FT runtime
+        (``repro.train.ftrun.FTTrainer``) overrides this with the
+        split-phase step that routes optimizer-internal factorizations
+        through host-driven FT-CAQR sweeps — everything else in ``run``
+        (diskless checkpoints, failure semantics, deterministic replay) is
+        shared verbatim."""
+        self.state, metrics = self._step_fn(self.state, batch)
+        return metrics
+
     # -- main loop -------------------------------------------------------------
     def run(self, schedule: Optional[FailureSchedule] = None) -> List[Dict]:
         self.detector.schedule = schedule or FailureSchedule()
-        step = 0
+        step = self._start_step
         while step < self.tcfg.steps:
             newly_dead = self.detector.begin_step(step)
             if newly_dead:
@@ -138,7 +152,7 @@ class Trainer:
                 )
             batch = self._lane_batch(step)
             t0 = time.perf_counter()
-            self.state, metrics = self._step_fn(self.state, batch)
+            metrics = self._execute_step(step, batch)
             dt = time.perf_counter() - t0
             rec = {
                 "step": step,

@@ -31,50 +31,67 @@ class TrainState(NamedTuple):
     step: jax.Array
 
 
+def make_loss_and_grads(cfg: ModelConfig, grad_accum: int = 1):
+    """The gradient computation of ``make_train_step`` as its own builder:
+    ``(params, batch) -> (loss, grads)`` with the same optional microbatch
+    scan. Shared by the monolithic jitted step and the FT runtime's split
+    grad phase (``repro.train.ftrun``) so both run the identical FP
+    program."""
+    loss_fn = api.make_forward_loss(cfg)
+
+    def fn(params, batch):
+        def lg(p, b):
+            return jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+
+        if grad_accum == 1:
+            (loss, _), grads = lg(params, batch)
+            return loss, grads
+        # microbatch scan over the leading batch dim
+        def mb(carry, b):
+            (l, g) = carry
+            (li, _), gi = lg(params, b)
+            return (l + li, jax.tree_util.tree_map(jnp.add, g, gi)), None
+
+        B = batch["tokens"].shape[0]
+        assert B % grad_accum == 0
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((grad_accum, B // grad_accum) + x.shape[1:]),
+            batch,
+        )
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss, grads), _ = jax.lax.scan(mb, (jnp.zeros(()), zero), mbs)
+        loss = loss / grad_accum
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        return loss, grads
+
+    return fn
+
+
+def grad_norm(grads) -> jax.Array:
+    """Global L2 norm over a gradient pytree (f32 accumulate)."""
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads))
+    )
+
+
 def make_train_step(
     cfg: ModelConfig,
     optimizer,
     lr_fn: Callable,
     grad_accum: int = 1,
 ):
-    loss_fn = api.make_forward_loss(cfg)
+    loss_and_grads = make_loss_and_grads(cfg, grad_accum)
 
     def step(state: TrainState, batch):
-        def lg(params, b):
-            return jax.value_and_grad(loss_fn, has_aux=True)(params, b)
-
-        if grad_accum == 1:
-            (loss, metrics), grads = lg(state.params, batch)
-        else:
-            # microbatch scan over the leading batch dim
-            def mb(carry, b):
-                (l, g) = carry
-                (li, _), gi = lg(state.params, b)
-                return (l + li, jax.tree_util.tree_map(jnp.add, g, gi)), None
-
-            B = batch["tokens"].shape[0]
-            assert B % grad_accum == 0
-            mbs = jax.tree_util.tree_map(
-                lambda x: x.reshape((grad_accum, B // grad_accum) + x.shape[1:]),
-                batch,
-            )
-            zero = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
-            )
-            (loss, grads), _ = jax.lax.scan(mb, (jnp.zeros(()), zero), mbs)
-            loss = loss / grad_accum
-            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
-            metrics = {}
-
+        loss, grads = loss_and_grads(state.params, batch)
         lr = lr_fn(state.step)
         updates, opt_state = optimizer.update(grads, state.opt_state, state.params, lr)
         params = adamw_mod.apply_updates(state.params, updates)
-        gnorm = jnp.sqrt(
-            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree_util.tree_leaves(grads))
-        )
         return TrainState(params, opt_state, state.step + 1), {
-            "loss": loss, "lr": lr, "gnorm": gnorm,
+            "loss": loss, "lr": lr, "gnorm": grad_norm(grads),
         }
 
     return step

@@ -163,3 +163,75 @@ def test_spmd_kill_matrix_p32():
         print("P32_OK")
     """, n_devices=32)
     assert "P32_OK" in out
+
+
+_FTRUN_TRAIN_BODY = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke
+    from repro.data.pipeline import DataConfig
+    from repro.ft.semantics import Semantics
+    from repro.train.loop import TrainConfig
+    from repro.train.ftrun import FTRunConfig, FTTrainer, StepSweepKiller
+
+    cfg = get_smoke("tinyllama-1.1b")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=1)
+    tcfg = TrainConfig(steps=3, lr=1e-2, warmup=2, n_lanes=4,
+                       diskless_every=2, log_every=100,
+                       semantics=Semantics.REBUILD, optimizer="caqr_muon")
+
+    def params_equal(a, b):
+        eq = jax.tree_util.tree_map(
+            lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+            a, b)
+        return all(jax.tree_util.tree_leaves(eq))
+
+    mesh_cfg = FTRunConfig(use_mesh=True)
+    ref = FTTrainer(cfg, tcfg, dcfg, mesh_cfg)
+    assert ref.engine.n_lanes == {lanes}, ref.engine.n_lanes
+    hist_ref = ref.run()
+
+    killer = StepSweepKiller(at_step=1, lane={kill_lane})
+    tr = FTTrainer(cfg, tcfg, dcfg, FTRunConfig(use_mesh=True),
+                   qr_fault_hooks=[killer])
+    hist = tr.run()
+    assert killer.fired, "kill never landed inside the optimizer sweep"
+    assert params_equal(ref.state.params, tr.state.params)
+    assert ([h["loss"] for h in hist_ref] == [h["loss"] for h in hist])
+    print("mesh kill at", killer.struck)
+
+    # SimComm engine at the same lane count is bitwise-equal to the
+    # shard_map path (the online segment oracle, at training level)
+    sim = FTTrainer(cfg, tcfg, dcfg, FTRunConfig(qr_lanes={lanes}))
+    sim.run()
+    assert params_equal(ref.state.params, sim.state.params)
+    print("FTRUN_TRAIN_OK")
+"""
+
+
+def test_ftrun_train_kill_p16():
+    """Tier-1 spot: the FT training runtime on a 16-lane QR mesh — a lane
+    killed inside the optimizer-internal sweep at step 1 trains on to
+    params and loss curve bitwise-identical to failure-free, and the
+    shard_map engine matches the SimComm engine bitwise."""
+    out = run_forced_devices(
+        _FTRUN_TRAIN_BODY.format(lanes=16, kill_lane=11), n_devices=16)
+    assert "FTRUN_TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_ftrun_train_kill_p32():
+    """P=32 training mesh (butterfly level 4 inside the optimizer)."""
+    out = run_forced_devices(
+        _FTRUN_TRAIN_BODY.format(lanes=32, kill_lane=21), n_devices=32,
+        timeout=1800)
+    assert "FTRUN_TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_ftrun_train_kill_p48():
+    """Non-power-of-two pod: 48 devices, and the runtime sizes its QR mesh
+    to the largest power-of-two prefix (32 lanes) via ``pow2_lanes``."""
+    out = run_forced_devices(
+        _FTRUN_TRAIN_BODY.format(lanes=32, kill_lane=27), n_devices=48,
+        timeout=1800)
+    assert "FTRUN_TRAIN_OK" in out

@@ -26,11 +26,12 @@ def test_loss_decreases(dcfg):
     assert hist[-1]["loss"] < hist[0]["loss"] * 0.8
 
 
-def test_rebuild_is_bit_identical(dcfg):
+@pytest.mark.parametrize("optimizer", ["adamw", "caqr_muon"])
+def test_rebuild_is_bit_identical(dcfg, optimizer):
     cfg = get_smoke("tinyllama-1.1b")
     tcfg = TrainConfig(steps=20, lr=1e-2, warmup=5, n_lanes=4,
                        diskless_every=5, log_every=100,
-                       semantics=Semantics.REBUILD)
+                       semantics=Semantics.REBUILD, optimizer=optimizer)
     ref = Trainer(cfg, tcfg, dcfg)
     ref.run()
     failed = Trainer(cfg, tcfg, dcfg)

@@ -31,6 +31,7 @@ REQUIRED_HEADINGS = {
         "### Semantics support",
         "### Coded redundancy: the `f` knob",
         "## Serving: QR-as-a-service",
+        "## Training: the FT runtime",
     ],
     "DESIGN.md": [
         "## 5. Recovery data-flow",
@@ -41,6 +42,7 @@ REQUIRED_HEADINGS = {
         "## 11. Elastic execution",
         "## 12. Serving: QR-as-a-service",
         "## 13. Coded redundancy",
+        "## 14. Fault-tolerant training runtime",
     ],
 }
 

@@ -71,6 +71,12 @@ python examples/quickstart.py
 python examples/failure_recovery_training.py --steps 8
 python examples/online_recovery.py   # runtime-detected kill + suspend/resume
 
+echo "== train smoke (FT training runtime: CAQR-Muon orthogonalization =="
+echo "== through the FT-QR engine, a lane killed inside the =="
+echo "== optimizer-internal sweep, params + loss curve asserted bitwise =="
+echo "== vs failure-free) =="
+python examples/train_tiny_lm.py --steps 6
+
 echo "== SPMD smoke (shard_map FT sweep on a forced 4-device host mesh) =="
 python examples/spmd_quickstart.py
 
@@ -120,11 +126,13 @@ python tools/kernel_smoke.py
 
 echo "== benchmark smoke (writes BENCH_core.json; fails loudly if the =="
 echo "== online stepped overhead, the elastic SHRINK continuation, the =="
-echo "== serve continuous-batching overhead, or the coded-lane f=2 =="
-echo "== encode overhead regresses >25% over the recorded baseline; =="
-echo "== escapes: CI_ALLOW_ONLINE_REGRESSION=1 / =="
+echo "== serve continuous-batching overhead, the coded-lane f=2 encode =="
+echo "== overhead, or the train per-boundary cost regresses >25% over =="
+echo "== the recorded baseline — and the train tier's async segments =="
+echo "== and compiled probe must be strictly cheaper than their sync =="
+echo "== counterparts; escapes: CI_ALLOW_ONLINE_REGRESSION=1 / =="
 echo "== CI_ALLOW_ELASTIC_REGRESSION=1 / CI_ALLOW_SERVE_REGRESSION=1 / =="
-echo "== CI_ALLOW_CODING_REGRESSION=1) =="
+echo "== CI_ALLOW_CODING_REGRESSION=1 / CI_ALLOW_TRAIN_REGRESSION=1) =="
 python -m benchmarks.run --quick
 
 echo "CI OK"
